@@ -1,0 +1,91 @@
+"""Shared benchmark infrastructure: workloads, timing, CSV rows."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import (
+    StorageSolution,
+    WorkloadSpec,
+    dc_like,
+    generate,
+    lc_like,
+)
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable[[], Any], *, repeats: int = 1) -> tuple:
+    t0 = time.monotonic()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    dt = (time.monotonic() - t0) / repeats
+    return out, dt * 1e6  # µs
+
+
+@functools.lru_cache(maxsize=None)
+def workload(kind: str, n: int, seed: int = 0, directed: bool = True):
+    if kind == "dc":
+        spec = dc_like(n, seed=seed, directed=directed)
+    elif kind == "lc":
+        spec = lc_like(n, seed=seed, directed=directed)
+    elif kind == "bf":  # many small forks of one repo (Bootstrap-forks shape)
+        spec = WorkloadSpec(
+            commits=n, branch_interval=2, branch_prob=0.9, branch_limit=6,
+            branch_length=2, reveal_hops=6, edit_rate=0.02, seed=seed,
+            directed=directed,
+        )
+    elif kind == "lf":  # few large forks with deep histories (Linux-forks)
+        spec = WorkloadSpec(
+            commits=n, branch_interval=10, branch_prob=0.5, branch_limit=2,
+            branch_length=30, reveal_hops=12, edit_rate=0.01,
+            init_blocks=1200, seed=seed, directed=directed,
+        )
+    else:
+        raise ValueError(kind)
+    return generate(spec)
+
+
+def random_cost_graph(n: int, avg_deg: int = 20, seed: int = 0):
+    """Cost-only version graph for solver *runtime* scaling (paper Fig 17
+    times the algorithms on precomputed deltas; measuring real block-set
+    deltas at n≥800 is generator-bound, not solver-bound)."""
+    import random
+
+    from repro.core import VersionGraph
+
+    rng = random.Random(seed)
+    g = VersionGraph(n, directed=True)
+    for i in g.versions():
+        size = rng.uniform(1e6, 2e6)
+        g.set_materialization(i, size, size)
+    for i in range(2, n + 1):
+        parent = rng.randint(1, i - 1)
+        d = rng.uniform(1e3, 1e5)
+        g.set_delta(parent, i, d, d)           # derivation edge
+        for _ in range(avg_deg - 1):           # extra revealed deltas
+            j = rng.randint(1, n)
+            if j != i:
+                d = rng.uniform(1e3, 5e5)
+                g.set_delta(j, i, d, d)
+    return g
+
+
+def frontier_point(sol: StorageSolution) -> Dict[str, float]:
+    return {
+        "storage": sol.storage_cost(),
+        "sum_rec": sol.sum_recreation(),
+        "max_rec": sol.max_recreation(),
+    }

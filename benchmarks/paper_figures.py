@@ -1,0 +1,221 @@
+"""Benchmarks reproducing the paper's experiment families (Figs 13-17, Tab 2).
+
+Scaled to this CPU container (hundreds of versions rather than 100k) but
+preserving the figures' comparisons and the claims being validated:
+
+  fig13  storage ↔ Σ-recreation frontier, directed (LMG best balance)
+  fig14  storage ↔ max-recreation, directed (MP best)
+  fig15  same, undirected
+  fig16  workload-aware LMG under Zipfian access beats oblivious
+  fig17  solver running times vs n
+  tab2   exact (B&B, stands in for Gurobi) vs MP storage at fixed θ
+  git    §5.2-style: GitH/MCA storage vs store-everything
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import (
+    exact_min_storage,
+    git_heuristic,
+    last_tree,
+    local_move_greedy,
+    min_max_recreation_under_budget,
+    minimum_storage_tree,
+    modified_prim,
+    shortest_path_tree,
+    zipf_weights,
+)
+from repro.core.solvers.mp import InfeasibleError
+
+from .common import Row, random_cost_graph, timed, workload
+
+
+def fig13_tradeoff_directed() -> List[Row]:
+    rows: List[Row] = []
+    for kind, n in (("dc", 220), ("lc", 220)):
+        g = workload(kind, n).graph
+        mca = minimum_storage_tree(g)
+        spt = shortest_path_tree(g)
+        c0, r0, rmin = mca.storage_cost(), mca.sum_recreation(), spt.sum_recreation()
+        for mult in (1.05, 1.1, 1.25, 1.5, 2.0, 3.0):
+            sol, us = timed(lambda m=mult: local_move_greedy(g, c0 * m))
+            rows.append(Row(
+                f"fig13/{kind}/lmg@{mult:g}x", us,
+                f"storage={sol.storage_cost():.3e};sum_rec={sol.sum_recreation():.3e};"
+                f"rec_vs_spt={sol.sum_recreation()/rmin:.2f}",
+            ))
+        for alpha in (1.25, 1.5, 2.0, 3.0):
+            sol, us = timed(lambda a=alpha: last_tree(g, a))
+            rows.append(Row(
+                f"fig13/{kind}/last@a{alpha:g}", us,
+                f"storage={sol.storage_cost():.3e};sum_rec={sol.sum_recreation():.3e}",
+            ))
+        for w in (10, 25, 50):
+            sol, us = timed(lambda w=w: git_heuristic(g, window=w, max_depth=20))
+            rows.append(Row(
+                f"fig13/{kind}/gith@w{w}", us,
+                f"storage={sol.storage_cost():.3e};sum_rec={sol.sum_recreation():.3e}",
+            ))
+        # headline claim: small storage slack slashes Σ-recreation vs MCA
+        lmg11 = local_move_greedy(g, c0 * 1.1)
+        rows.append(Row(
+            f"fig13/{kind}/headline", 0.0,
+            f"mca_sum_rec={r0:.3e};lmg1.1x_sum_rec={lmg11.sum_recreation():.3e};"
+            f"reduction={r0 / lmg11.sum_recreation():.2f}x",
+        ))
+    return rows
+
+
+def fig14_maxrec_directed() -> List[Row]:
+    rows: List[Row] = []
+    for kind in ("dc", "lc"):
+        g = workload(kind, 220).graph
+        mca = minimum_storage_tree(g)
+        spt = shortest_path_tree(g)
+        budget_mults = (1.1, 1.5, 2.0, 3.0)
+        for m in budget_mults:
+            sol, us = timed(
+                lambda m=m: min_max_recreation_under_budget(g, mca.storage_cost() * m)
+            )
+            rows.append(Row(
+                f"fig14/{kind}/mp@{m:g}x", us,
+                f"storage={sol.storage_cost():.3e};max_rec={sol.max_recreation():.3e}",
+            ))
+            lmg = local_move_greedy(g, mca.storage_cost() * m)
+            last = last_tree(g, 1.0 + m)
+            rows.append(Row(
+                f"fig14/{kind}/cmp@{m:g}x", 0.0,
+                f"mp_max={sol.max_recreation():.3e};lmg_max={lmg.max_recreation():.3e};"
+                f"last_max={last.max_recreation():.3e}",
+            ))
+    return rows
+
+
+def fig15_undirected() -> List[Row]:
+    rows: List[Row] = []
+    for kind in ("dc", "bf"):
+        g = workload(kind, 200, directed=False).graph
+        mst = minimum_storage_tree(g)
+        for m in (1.1, 1.5, 2.5):
+            lmg = local_move_greedy(g, mst.storage_cost() * m)
+            rows.append(Row(
+                f"fig15/{kind}/lmg@{m:g}x", 0.0,
+                f"storage={lmg.storage_cost():.3e};sum_rec={lmg.sum_recreation():.3e}",
+            ))
+        la = last_tree(g, 2.0)
+        rows.append(Row(
+            f"fig15/{kind}/last@a2", 0.0,
+            f"storage={la.storage_cost():.3e};sum_rec={la.sum_recreation():.3e}",
+        ))
+        spt = shortest_path_tree(g)
+        try:
+            mp = modified_prim(g, spt.max_recreation() * 1.5)
+            rows.append(Row(
+                f"fig15/{kind}/mp@1.5spt", 0.0,
+                f"storage={mp.storage_cost():.3e};max_rec={mp.max_recreation():.3e}",
+            ))
+        except InfeasibleError:
+            pass
+    return rows
+
+
+def fig16_workload_aware() -> List[Row]:
+    rows: List[Row] = []
+    for kind in ("dc", "lf"):
+        g = workload(kind, 200).graph
+        w = zipf_weights(g.n, exponent=2.0, seed=3)
+        mca = minimum_storage_tree(g)
+        for m in (1.1, 1.5, 2.0):
+            budget = mca.storage_cost() * m
+            aware = local_move_greedy(g, budget, weights=w)
+            blind = local_move_greedy(g, budget)
+            rows.append(Row(
+                f"fig16/{kind}/@{m:g}x", 0.0,
+                f"aware_wrec={aware.sum_recreation(w):.3e};"
+                f"oblivious_wrec={blind.sum_recreation(w):.3e};"
+                f"gain={blind.sum_recreation(w)/max(aware.sum_recreation(w),1e-12):.2f}x",
+            ))
+    return rows
+
+
+def fig17_running_times() -> List[Row]:
+    """Solver runtimes vs n on precomputed-cost graphs (the paper times the
+    algorithms, not delta construction — §5.3 'Running Times')."""
+    rows: List[Row] = []
+    for n in (100, 200, 400, 800, 1600):
+        g = random_cost_graph(n, avg_deg=20, seed=1)
+        mca, us_mca = timed(lambda: minimum_storage_tree(g))
+        spt, us_spt = timed(lambda: shortest_path_tree(g))
+        _, us_lmg = timed(lambda: local_move_greedy(g, mca.storage_cost() * 1.5,
+                                                    base=mca, spt=spt))
+        _, us_mp = timed(lambda: modified_prim(g, spt.max_recreation() * 2))
+        _, us_last = timed(lambda: last_tree(g, 2.0, base=mca))
+        _, us_gith = timed(lambda: git_heuristic(g, window=20, max_depth=20))
+        rows.append(Row(
+            f"fig17/n{n}", us_lmg,
+            f"edges={g.n_edges};mca_us={us_mca:.0f};spt_us={us_spt:.0f};"
+            f"lmg_us={us_lmg:.0f};mp_us={us_mp:.0f};last_us={us_last:.0f};"
+            f"gith_us={us_gith:.0f}",
+        ))
+    return rows
+
+
+def table2_exact_vs_mp() -> List[Row]:
+    rows: List[Row] = []
+    for n in (10, 15, 20):
+        g = workload("dc", n, seed=4).graph
+        spt = shortest_path_tree(g)
+        base_theta = spt.max_recreation()
+        for mult in (1.2, 1.5, 2.0, 3.0, 5.0):
+            theta = base_theta * mult
+            mp = modified_prim(g, theta)
+            # seed the B&B with MP's solution — same role as warm-starting
+            # Gurobi; the paper's Table 2 likewise reports best-found when
+            # the optimizer hits its budget
+            ex, us = timed(lambda t=theta: exact_min_storage(
+                g, theta_max=t, time_budget_s=15, incumbent=mp))
+            gap = mp.storage_cost() / max(ex.solution.storage_cost(), 1e-12)
+            rows.append(Row(
+                f"tab2/v{n}/theta{mult:g}x", us,
+                f"exact={ex.solution.storage_cost():.3e};mp={mp.storage_cost():.3e};"
+                f"gap={gap:.3f};optimal={ex.optimal};nodes={ex.nodes_explored}",
+            ))
+    return rows
+
+
+def scale_trend() -> List[Row]:
+    """The Fig-13 headline vs version count: MCA's Σ-recreation grows with
+    chain depth while LMG@1.1x tracks the SPT floor; on this generator the
+    reduction climbs from ~1.06x (n=100) to ~1.5-1.6x (n>=250) — the paper's
+    orders-of-magnitude appear at 100k versions."""
+    rows: List[Row] = []
+    for n in (100, 250, 400):
+        g = workload("lc", n, seed=9).graph
+        mca = minimum_storage_tree(g)
+        spt = shortest_path_tree(g)
+        lmg = local_move_greedy(g, mca.storage_cost() * 1.1, base=mca, spt=spt)
+        rows.append(Row(
+            f"scale/lc{n}", 0.0,
+            f"mca_sum_rec={mca.sum_recreation():.3e};"
+            f"lmg1.1_sum_rec={lmg.sum_recreation():.3e};"
+            f"reduction={mca.sum_recreation()/lmg.sum_recreation():.2f}x;"
+            f"spt_floor={spt.sum_recreation():.3e}",
+        ))
+    return rows
+
+
+def git_comparison() -> List[Row]:
+    """§5.2-style: store-everything vs GitH vs MCA storage on an LF shape."""
+    g = workload("lf", 120).graph
+    full = sum(g.materialization_cost(i).delta for i in g.versions())
+    mca = minimum_storage_tree(g)
+    gith = git_heuristic(g, window=50, max_depth=50)
+    return [Row(
+        "git_cmp/lf120", 0.0,
+        f"store_everything={full:.3e};gith={gith.storage_cost():.3e};"
+        f"mca={mca.storage_cost():.3e};"
+        f"gith_vs_mca={gith.storage_cost()/mca.storage_cost():.2f}x",
+    )]

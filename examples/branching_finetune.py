@@ -1,0 +1,93 @@
+"""Branch/merge model versioning — the paper's DATAHUB scenario on weights.
+
+Two teams fork a base checkpoint, fine-tune on different data, and the
+branches are merged (model souping).  All six states live in one version
+DAG; the storage graph is then optimized with the paper's solvers and the
+access-frequency-aware LMG variant (Fig. 16) using real access counts.
+
+Run:  PYTHONPATH=src python examples/branching_finetune.py
+"""
+
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models.registry import get_model
+from repro.store import VersionStore
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import TrainConfig, make_train_step
+from repro.data.pipeline import SyntheticTokenPipeline
+
+
+def finetune(bundle, params, *, seed: int, steps: int = 8):
+    tcfg = TrainConfig(optimizer=OptimizerConfig(peak_lr=5e-4, warmup_steps=2,
+                                                 total_steps=steps))
+    step_fn = jax.jit(make_train_step(bundle, tcfg), donate_argnums=(0,))
+    pipe = SyntheticTokenPipeline(vocab=bundle.cfg.vocab, seq_len=64,
+                                  global_batch=4, seed=seed)
+    params = jax.tree.map(jnp.copy, params)  # donation below must not eat the base
+    state = {"params": params, "opt": init_opt_state(params), "error_fb": None}
+    for _ in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        state, m = step_fn(state, batch)
+    return state["params"], float(m["loss"])
+
+
+def main() -> None:
+    cfg = ARCHS["minitron-4b"].reduced()
+    bundle = get_model(cfg)
+    base = bundle.init(jax.random.PRNGKey(0))
+
+    d = tempfile.mkdtemp(prefix="repro_branches_")
+    store = VersionStore(d)
+
+    v_base = store.commit(base, message="pretrained base")
+    print(f"v{v_base}: base committed")
+
+    team_a, loss_a = finetune(bundle, base, seed=1)
+    v_a = store.commit(team_a, parents=[v_base], message="team A finetune")
+    team_a2, loss_a2 = finetune(bundle, team_a, seed=11)
+    v_a2 = store.commit(team_a2, parents=[v_a], message="team A round 2")
+
+    team_b, loss_b = finetune(bundle, base, seed=2)
+    v_b = store.commit(team_b, parents=[v_base], message="team B finetune")
+
+    soup = jax.tree.map(lambda a, b: ((a.astype(jnp.float32)
+                                       + b.astype(jnp.float32)) / 2).astype(a.dtype),
+                        team_a2, team_b)
+    v_soup = store.commit(soup, parents=[v_a2, v_b], message="soup(A2, B)")
+    print(f"version DAG: base->({v_a}->{v_a2}, {v_b})->merge v{v_soup}")
+
+    full = sum(m.raw_bytes for m in store.log())
+    print(f"raw payloads {full/1e6:.1f} MB -> stored {store.storage_bytes()/1e6:.1f} MB "
+          f"(delta chains)")
+
+    # simulate an access pattern: the soup is served constantly
+    for _ in range(25):
+        store.checkout(v_soup)
+    store.checkout(v_base)
+
+    stats = store.repack("lmg", budget=store.storage_bytes() * 1.4,
+                         use_access_frequencies=True)
+    print(f"workload-aware LMG repack: Σrestore "
+          f"{stats['before']['sum_recreation_s']*1e3:.1f}ms -> "
+          f"{stats['after']['sum_recreation_s']*1e3:.1f}ms "
+          f"at ≤1.4x storage")
+
+    # every version still reconstructs exactly
+    rec = store.checkout(v_soup)
+    want_leaves = jax.tree_util.tree_flatten_with_path(soup)[0]
+    from repro.store import flatten_payload
+    flat_soup = flatten_payload(soup)
+    for k, arr in flat_soup.items():
+        np.testing.assert_array_equal(rec[k], np.asarray(arr))
+    print("soup checkout verified byte-identical ✓")
+    shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Quickstart: the paper end to end in two minutes (CPU).
+
+1. Reproduces the paper's Figure 1 worked example exactly (storage graphs,
+   costs, solver outputs).
+2. Builds a synthetic versioned-dataset workload (paper §5.1), runs every
+   solver, and prints the storage/recreation frontier.
+3. Commits real tensor payloads to a VersionStore, repacks with LMG/MP, and
+   verifies checkouts are byte-identical.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    VersionGraph, dc_like, generate, git_heuristic, last_tree,
+    local_move_greedy, minimum_storage_tree, modified_prim,
+    shortest_path_tree, zipf_weights,
+)
+from repro.store import VersionStore, flatten_payload
+
+
+def figure1() -> None:
+    print("=== Paper Figure 1 ===")
+    g = VersionGraph(5, directed=True)
+    for i, (s, r) in enumerate(
+        [(10000, 10000), (10100, 10100), (9700, 9700), (9800, 9800), (10120, 10120)], 1
+    ):
+        g.set_materialization(i, s, r)
+    g.set_delta(1, 2, 200, 350)
+    g.set_delta(1, 3, 1000, 3000)
+    g.set_delta(2, 4, 50, 200)
+    g.set_delta(3, 5, 800, 2500)
+    g.set_delta(2, 5, 200, 550)
+
+    spt = shortest_path_tree(g)
+    mca = minimum_storage_tree(g)
+    print(f"  store-everything (Fig 1 ii):   C={spt.storage_cost():>7.0f}  "
+          f"maxR={spt.max_recreation():.0f}")
+    print(f"  min-storage MCA  (Fig 1 iii):  C={mca.storage_cost():>7.0f}  "
+          f"maxR={mca.max_recreation():.0f}")
+    lmg = local_move_greedy(g, budget=20150)
+    print(f"  balanced (Fig 1 iv budget):    C={lmg.storage_cost():>7.0f}  "
+          f"maxR={lmg.max_recreation():.0f}  materialized={lmg.materialized()}")
+
+
+def frontier() -> None:
+    print("\n=== Solver frontier on a DC-like synthetic workload (paper §5.1) ===")
+    wl = generate(dc_like(150, seed=7))
+    g = wl.graph
+    mca = minimum_storage_tree(g)
+    spt = shortest_path_tree(g)
+    c0, r0 = mca.storage_cost(), mca.sum_recreation()
+    print(f"  {'solver':14s} {'storage(GB)':>12s} {'sum rec(GB)':>12s} {'max rec(GB)':>12s}")
+    rows = [
+        ("MCA", mca), ("SPT", spt),
+        ("LMG 1.1x", local_move_greedy(g, c0 * 1.1)),
+        ("LMG 1.5x", local_move_greedy(g, c0 * 1.5)),
+        ("MP θ=2·spt", modified_prim(g, spt.max_recreation() * 2)),
+        ("LAST α=2", last_tree(g, 2.0)),
+        ("GitH w=20", git_heuristic(g, window=20, max_depth=20)),
+    ]
+    for name, sol in rows:
+        print(f"  {name:14s} {sol.storage_cost()/1e9:12.3f} "
+              f"{sol.sum_recreation()/1e9:12.3f} {sol.max_recreation()/1e9:12.4f}")
+    # the paper's headline: ~1.1x storage slack cuts Σ-recreation enormously
+    lmg = local_move_greedy(g, c0 * 1.1)
+    print(f"  -> LMG at 1.1x MCA storage reduces Σ-recreation "
+          f"{r0 / lmg.sum_recreation():.1f}x vs MCA")
+
+
+def tensors() -> None:
+    print("\n=== VersionStore on real tensor payloads ===")
+    import tempfile
+    rng = np.random.RandomState(0)
+    payload = {"w": rng.randn(256, 256).astype(np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        store = VersionStore(d)
+        vids = [store.commit(payload, message="base")]
+        for i in range(5):
+            payload = {"w": payload["w"].copy()}
+            payload["w"][i * 10 : i * 10 + 8] += 1.0  # localized edit
+            vids.append(store.commit(payload, parents=[vids[-1]]))
+        print(f"  6 versions, {store.storage_bytes()/1e3:.1f} KB stored "
+              f"(full would be ~{6 * 256 * 256 * 4 / 1e3:.0f} KB uncompressed)")
+        stats = store.repack("mp", theta=store.cost_model.phi_full(300_000, 300_000) * 2)
+        print(f"  repack(MP): storage {stats['before']['storage_bytes']/1e3:.1f} "
+              f"-> {stats['after']['storage_bytes']/1e3:.1f} KB, "
+              f"max restore {stats['after']['max_recreation_s']*1e3:.2f} ms")
+        w = store.checkout(vids[-1])["w"]
+        assert np.array_equal(w, payload["w"]), "checkout mismatch!"
+        print("  checkout verified byte-identical ✓")
+
+
+if __name__ == "__main__":
+    figure1()
+    frontier()
+    tensors()

@@ -1,0 +1,39 @@
+"""Batched serving with a contiguous KV cache (prefill + decode steps).
+
+Runs the reduced qwen3-32b family (GQA + qk-norm) through the ServeEngine:
+batched prefill, greedy decode, throughput report.  The identical bundle
+functions lower at pod scale in the dry-run's prefill_32k/decode_32k cells.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models.registry import get_model
+from repro.serving.engine import ServeEngine
+
+
+def main() -> None:
+    cfg = ARCHS["qwen3-32b"].reduced()
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    B, prompt, new = 4, 48, 24
+    engine = ServeEngine(bundle, params, max_len=prompt + new, batch=B)
+    rng = np.random.RandomState(0)
+    batch = {"tokens": rng.randint(0, cfg.vocab, (B, prompt)).astype(np.int32)}
+    res = engine.generate(batch, max_new_tokens=new)
+    print(f"[serve] batch={B} prompt={prompt} -> {res.steps} new tokens/request")
+    print(f"[serve] prefill {res.prefill_s*1e3:.1f} ms, "
+          f"decode {res.decode_s/max(res.steps,1)*1e3:.1f} ms/step, "
+          f"{res.steps*B/max(res.decode_s,1e-9):.1f} tok/s")
+    print(f"[serve] greedy determinism check:", end=" ")
+    res2 = ServeEngine(bundle, params, max_len=prompt + new, batch=B).generate(
+        batch, max_new_tokens=new)
+    assert np.array_equal(res.tokens, res2.tokens)
+    print("OK ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .emergency import PreemptionGuard
+from .versioned import VersionedCheckpointManager, restore_to_template
+
+__all__ = ["VersionedCheckpointManager", "PreemptionGuard", "restore_to_template"]

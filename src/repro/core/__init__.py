@@ -1,0 +1,64 @@
+"""Paper core: dataset-versioning storage/recreation tradeoff.
+
+Implements "Principles of Dataset Versioning: Exploring the Recreation/
+Storage Tradeoff" (Bhattacherjee et al., 2015): version graphs, the Δ/Φ cost
+matrices, the six optimization problems, and the LMG / MP / LAST / GitH /
+MCA / SPT / exact solvers.
+"""
+
+from .problems import (
+    SOLVERS,
+    solve_problem1,
+    solve_problem2,
+    solve_problem3,
+    solve_problem4,
+    solve_problem5,
+    solve_problem6,
+)
+from .solvers.exact import ExactResult, exact_min_storage
+from .solvers.gith import git_heuristic
+from .solvers.last import last_tree
+from .solvers.lmg import local_move_greedy, minimize_storage_sum_recreation
+from .solvers.mp import InfeasibleError, min_max_recreation_under_budget, modified_prim
+from .solvers.mst import minimum_storage_tree
+from .solvers.spt import dijkstra, shortest_path_tree
+from .synthetic import (
+    SyntheticWorkload,
+    WorkloadSpec,
+    dc_like,
+    generate,
+    lc_like,
+    zipf_weights,
+)
+from .version_graph import EdgeCost, StorageSolution, VersionGraph
+
+__all__ = [
+    "VersionGraph",
+    "StorageSolution",
+    "EdgeCost",
+    "minimum_storage_tree",
+    "shortest_path_tree",
+    "dijkstra",
+    "local_move_greedy",
+    "minimize_storage_sum_recreation",
+    "modified_prim",
+    "min_max_recreation_under_budget",
+    "InfeasibleError",
+    "last_tree",
+    "git_heuristic",
+    "exact_min_storage",
+    "ExactResult",
+    "solve_problem1",
+    "solve_problem2",
+    "solve_problem3",
+    "solve_problem4",
+    "solve_problem5",
+    "solve_problem6",
+    "SOLVERS",
+    "WorkloadSpec",
+    "SyntheticWorkload",
+    "generate",
+    "dc_like",
+    "lc_like",
+    "zipf_weights",
+]

@@ -1,0 +1,80 @@
+"""The six optimization problems of paper §2.1, dispatched to solvers.
+
+| Problem | objective            | constraint       | solver                       |
+|---------|----------------------|------------------|------------------------------|
+| 1       | min C                | R_i < ∞          | MST / MCA                    |
+| 2       | min each R_i         | C < ∞            | SPT                          |
+| 3       | min Σ R_i            | C ≤ β            | LMG                          |
+| 4       | min max R_i          | C ≤ β            | MP + bisection               |
+| 5       | min C                | Σ R_i ≤ θ        | LMG + binary search          |
+| 6       | min C                | max R_i ≤ θ      | MP                           |
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from .solvers.gith import git_heuristic
+from .solvers.last import last_tree
+from .solvers.lmg import local_move_greedy, minimize_storage_sum_recreation
+from .solvers.mp import min_max_recreation_under_budget, modified_prim
+from .solvers.mst import minimum_storage_tree
+from .solvers.spt import shortest_path_tree
+from .version_graph import StorageSolution, VersionGraph
+
+__all__ = [
+    "solve_problem1",
+    "solve_problem2",
+    "solve_problem3",
+    "solve_problem4",
+    "solve_problem5",
+    "solve_problem6",
+    "SOLVERS",
+]
+
+
+def solve_problem1(g: VersionGraph) -> StorageSolution:
+    """Minimize total storage; recreation costs merely finite."""
+    return minimum_storage_tree(g)
+
+
+def solve_problem2(g: VersionGraph) -> StorageSolution:
+    """Minimize every R_i (the SPT minimizes all of them simultaneously)."""
+    return shortest_path_tree(g)
+
+
+def solve_problem3(
+    g: VersionGraph, beta: float, *, weights: Optional[Dict[int, float]] = None
+) -> StorageSolution:
+    """Minimize Σ R_i subject to C ≤ β (LMG; workload-aware via weights)."""
+    return local_move_greedy(g, beta, weights=weights)
+
+
+def solve_problem4(g: VersionGraph, beta: float) -> StorageSolution:
+    """Minimize max R_i subject to C ≤ β."""
+    return min_max_recreation_under_budget(g, beta)
+
+
+def solve_problem5(
+    g: VersionGraph, theta: float, *, weights: Optional[Dict[int, float]] = None
+) -> StorageSolution:
+    """Minimize C subject to Σ R_i ≤ θ."""
+    return minimize_storage_sum_recreation(g, theta, weights=weights)
+
+
+def solve_problem6(g: VersionGraph, theta: float) -> StorageSolution:
+    """Minimize C subject to max R_i ≤ θ."""
+    return modified_prim(g, theta)
+
+
+# registry used by benchmarks / the version store's repack policy
+SOLVERS = {
+    "mca": lambda g, **kw: minimum_storage_tree(g),
+    "spt": lambda g, **kw: shortest_path_tree(g),
+    "lmg": lambda g, budget, **kw: local_move_greedy(g, budget, **kw),
+    "mp": lambda g, theta, **kw: modified_prim(g, theta),
+    "last": lambda g, alpha=2.0, **kw: last_tree(g, alpha),
+    "gith": lambda g, window=10, max_depth=50, **kw: git_heuristic(
+        g, window=window, max_depth=max_depth
+    ),
+}

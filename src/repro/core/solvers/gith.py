@@ -1,0 +1,69 @@
+"""GitH — the Git `repack` heuristic (paper §4.4 and Appendix A).
+
+* versions considered in non-increasing size (Δ_ii) order;
+* sliding window of at most ``w`` candidate bases;
+* depth bias: candidate base V_l is scored  Δ_{l,i} / (d_max − depth(V_l)),
+  so shallow chains are preferred over slightly smaller deltas deep in a
+  chain; bases at depth ≥ d_max are ineligible;
+* a version with no eligible base in the window (or whose best delta is not
+  smaller than materializing) is materialized at depth 0;
+* window reshuffle (Appendix A step 3): the chosen base moves to the *end*
+  of the window, the new version is appended, and the front is dropped to
+  keep the window at ``w``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from ..version_graph import StorageSolution, VersionGraph
+
+
+def git_heuristic(
+    g: VersionGraph,
+    *,
+    window: int = 10,
+    max_depth: int = 50,
+) -> StorageSolution:
+    sizes = {}
+    for i in g.versions():
+        c = g.materialization_cost(i)
+        if c is None:
+            raise ValueError(f"GitH needs Δ_ii for every version (missing {i})")
+        sizes[i] = c.delta
+    order = sorted(g.versions(), key=lambda i: (-sizes[i], i))
+
+    parent: Dict[int, int] = {}
+    depth: Dict[int, int] = {}
+    win: List[int] = []
+
+    for vi in order:
+        best_score, best_base = None, None
+        for vl in win:
+            if depth[vl] >= max_depth:
+                continue
+            c = g.cost(vl, vi)
+            if c is None:
+                continue  # delta never revealed / too large to request
+            if c.delta >= sizes[vi]:
+                continue  # delta no better than storing vi outright
+            score = c.delta / (max_depth - depth[vl])
+            if best_score is None or score < best_score:
+                best_score, best_base = score, vl
+        if best_base is None:
+            parent[vi] = 0
+            depth[vi] = 0
+        else:
+            parent[vi] = best_base
+            depth[vi] = depth[best_base] + 1
+            # move the chosen base to the end of the window
+            win.remove(best_base)
+            win.append(vi)
+            win.append(best_base)
+            vi = None  # appended already
+        if vi is not None:
+            win.append(vi)
+        while len(win) > window:
+            win.pop(0)
+
+    return StorageSolution(parent=parent, graph=g)

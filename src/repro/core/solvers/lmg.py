@@ -1,0 +1,178 @@
+"""LMG — Local Move Greedy (paper §4.1, Algorithm 1).
+
+Targets the *average/sum* recreation objective under a storage budget
+(Problem 3); Problem 5 is solved by binary search over the budget
+(`minimize_storage_sum_recreation`).
+
+Starts from the minimum-storage tree (MST undirected / MCA directed) and
+greedily swaps in shortest-path-tree edges maximizing
+
+    ρ = (reduction in Σ recreation cost) / (increase in storage cost)
+
+The paper's O(|V|²) refinement is implemented: subtree sizes (or subtree
+access-frequency mass for the workload-aware variant, §4.1 "Access
+Frequencies") are maintained incrementally so each candidate evaluates in
+O(1); applying a swap updates the affected subtree only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..version_graph import StorageSolution, VersionGraph
+from .mst import minimum_storage_tree
+from .spt import shortest_path_tree
+
+
+def local_move_greedy(
+    g: VersionGraph,
+    budget: float,
+    *,
+    weights: Optional[Dict[int, float]] = None,
+    base: Optional[StorageSolution] = None,
+    spt: Optional[StorageSolution] = None,
+) -> StorageSolution:
+    """Problem 3: min Σ_i R_i subject to C ≤ budget.
+
+    ``weights`` enables the workload-aware variant: the objective becomes
+    Σ_i w_i · R_i (Fig. 16 experiment).  ``base``/``spt`` may be passed to
+    reuse precomputed trees (the benchmark sweeps budgets over one instance).
+    """
+    base = base or minimum_storage_tree(g)
+    spt = spt or shortest_path_tree(g)
+    parent = dict(base.parent)
+    tree = StorageSolution(parent=parent, graph=g)
+
+    w_total = tree.storage_cost()
+    if w_total > budget + 1e-9:
+        raise ValueError(
+            f"budget {budget} below minimum storage {w_total}: infeasible"
+        )
+
+    # --- incremental state -------------------------------------------------
+    children: Dict[int, Set[int]] = {v: set() for v in g.vertices()}
+    for i, p in parent.items():
+        children[p].add(i)
+    d: Dict[int, float] = {0: 0.0}  # recreation cost in current tree
+
+    def _init_d(u: int) -> None:
+        for v in children[u]:
+            d[v] = d[u] + tree.edge_cost(v).phi
+            _init_d(v)
+
+    import sys
+
+    old_limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old_limit, g.n + 100))
+    try:
+        _init_d(0)
+        # subtree mass: count (unweighted) or Σ weights (workload-aware)
+        mass: Dict[int, float] = {}
+
+        def _init_mass(u: int) -> float:
+            m = (1.0 if weights is None else weights.get(u, 0.0)) if u != 0 else 0.0
+            for v in children[u]:
+                m += _init_mass(v)
+            mass[u] = m
+            return m
+
+        _init_mass(0)
+    finally:
+        sys.setrecursionlimit(old_limit)
+
+    def in_subtree(node: int, root_v: int) -> bool:
+        v = node
+        while v != 0:
+            if v == root_v:
+                return True
+            v = parent[v]
+        return False
+
+    # candidate pool ξ: SPT edges absent from the current tree
+    candidates: Set[Tuple[int, int]] = {
+        (spt.parent[v], v) for v in g.versions() if spt.parent[v] != parent[v]
+    }
+
+    while candidates:
+        best_rho, best_edge = 0.0, None
+        for (u, v) in candidates:
+            if parent[v] == u:
+                continue
+            c_new = g.materialization_cost(v) if u == 0 else g.cost(u, v)
+            assert c_new is not None
+            c_old = tree.edge_cost(v)
+            dw = c_new.delta - c_old.delta
+            if w_total + dw > budget + 1e-9:
+                continue  # would violate the storage budget
+            if u != 0 and in_subtree(u, v):
+                continue  # would create a cycle
+            dd = (d[u] + c_new.phi) - d[v]  # change in v's recreation cost
+            reduction = -dd * mass[v]
+            if reduction <= 0:
+                continue
+            rho = reduction / dw if dw > 0 else float("inf")
+            if rho > best_rho:
+                best_rho, best_edge = rho, (u, v, dw, dd)
+        if best_edge is None:
+            break
+        u, v, dw, dd = best_edge
+        old_u = parent[v]
+        # rewire
+        children[old_u].discard(v)
+        children[u].add(v)
+        parent[v] = u
+        w_total += dw
+        # subtree mass moves from old ancestors to new ancestors
+        m = mass[v]
+        a = old_u
+        while a != 0:
+            mass[a] -= m
+            a = parent[a]
+        a = u
+        while a != 0:
+            mass[a] += m
+            a = parent[a]
+        # recreation costs of v's subtree shift by dd
+        stack = [v]
+        while stack:
+            x = stack.pop()
+            d[x] += dd
+            stack.extend(children[x])
+        candidates.discard((u, v))
+
+    return tree
+
+
+def minimize_storage_sum_recreation(
+    g: VersionGraph,
+    theta: float,
+    *,
+    weights: Optional[Dict[int, float]] = None,
+    tol: float = 1e-3,
+    max_iters: int = 48,
+) -> StorageSolution:
+    """Problem 5: min C subject to Σ_i R_i ≤ theta, by binary search on the
+    budget passed to LMG (paper §4.1: "repeated iterations and binary search").
+    """
+    base = minimum_storage_tree(g)
+    spt = shortest_path_tree(g)
+    lo = base.storage_cost()
+    hi = spt.storage_cost()
+    if spt.sum_recreation(weights) > theta + 1e-9:
+        raise ValueError("theta below SPT sum-recreation: infeasible")
+    if base.sum_recreation(weights) <= theta:
+        return base
+    best = None
+    for _ in range(max_iters):
+        mid = 0.5 * (lo + hi)
+        sol = local_move_greedy(g, mid, weights=weights, base=base, spt=spt)
+        if sol.sum_recreation(weights) <= theta:
+            best, hi = sol, mid
+        else:
+            lo = mid
+        if hi - lo <= tol * max(1.0, lo):
+            break
+    if best is None:
+        # fall back to the SPT (always feasible given the check above)
+        best = spt
+    return best

@@ -1,0 +1,145 @@
+"""MP — Modified Prim's algorithm (paper §4.2, Algorithm 2).
+
+Targets the *max* recreation objective: Problem 6 (min C s.t. max_i R_i ≤ θ)
+directly, Problem 4 (min max R_i s.t. C ≤ β) by bisecting θ.
+
+Faithful details:
+* priority queue keyed by the marginal storage cost l(V_i);
+* when a dequeued vertex's edges are scanned, neighbours *already in the
+  tree* may be re-parented if that lowers their storage cost without raising
+  their recreation cost (the non-standard relaxation of Algorithm 2,
+  lines 10–17);
+* neighbours outside the tree are relaxed only if the recreation cost through
+  V_i stays within θ (lines 19–24).
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, Optional
+
+from ..version_graph import StorageSolution, VersionGraph
+from .mst import minimum_storage_tree
+from .spt import dijkstra
+
+
+class InfeasibleError(ValueError):
+    pass
+
+
+def _is_ancestor(p: Dict[int, int], anc: int, node: int) -> bool:
+    """True if ``anc`` lies on ``node``'s current parent chain."""
+    x = node
+    while x != 0:
+        if x == anc:
+            return True
+        x = p.get(x, 0)
+    return False
+
+
+def modified_prim(g: VersionGraph, theta: float) -> StorageSolution:
+    """Problem 6: min total storage subject to max_i R_i ≤ theta."""
+    INF = float("inf")
+    l: Dict[int, float] = {v: INF for v in g.vertices()}
+    d: Dict[int, float] = {v: INF for v in g.vertices()}
+    p: Dict[int, int] = {}
+    l[0] = d[0] = 0.0
+    in_tree = set()
+    pq = [(0.0, 0)]
+    counter = 0
+    while pq:
+        li, vi = heapq.heappop(pq)
+        if vi in in_tree or li > l[vi] + 1e-15:
+            continue  # stale entry
+        in_tree.add(vi)
+        for vj, c in g.out_edges(vi):
+            if vj in in_tree:
+                # relaxation of in-tree nodes (lines 10-17)
+                if c.phi + d[vi] <= d[vj] + 1e-15 and c.delta <= l[vj] - 1e-15:
+                    if _is_ancestor(p, vj, vi):
+                        continue  # re-parenting under a descendant would cycle
+                    p[vj] = vi
+                    d[vj] = c.phi + d[vi]
+                    l[vj] = c.delta
+            else:
+                # standard frontier relaxation under the θ constraint
+                if c.phi + d[vi] <= theta + 1e-9 and c.delta < l[vj] - 1e-15:
+                    d[vj] = c.phi + d[vi]
+                    l[vj] = c.delta
+                    p[vj] = vi
+                    heapq.heappush(pq, (l[vj], vj))
+        counter += 1
+    missing = [i for i in g.versions() if i not in in_tree]
+    if missing:
+        # The greedy dequeue order (by storage) can strand a version even at a
+        # feasible θ, because d() along the partially-built tree may overshoot
+        # where the SPT path would not.  Problem 6 is feasible iff
+        # θ ≥ max_i SPT(i) (the SPT minimizes every R_i), so splice SPT paths:
+        # each splice sets d to the SPT distance — never an increase for any
+        # already-reached node — hence the θ invariant is preserved.
+        dist, sp_parent = dijkstra(g, weight="phi")
+        bad = [i for i in missing if dist.get(i, float("inf")) > theta + 1e-9]
+        if bad:
+            raise InfeasibleError(
+                f"theta={theta} infeasible: versions {bad[:5]} have SPT "
+                f"recreation above the bound"
+            )
+        for v in missing:
+            # full SPT path root→v, relaxed front to back: the running cost is
+            # ≤ the SPT distance at every node (induction on path prefixes).
+            path = [v]
+            while path[-1] != 0:
+                path.append(sp_parent[path[-1]])
+            path.reverse()
+            for u, x in zip(path, path[1:]):
+                c = g.materialization_cost(x) if u == 0 else g.cost(u, x)
+                cand = d[u] + c.phi
+                if x not in in_tree or cand < d[x] - 1e-15:
+                    p[x] = u
+                    d[x] = cand
+                    l[x] = c.delta
+                    in_tree.add(x)
+    sol = StorageSolution(parent={i: p[i] for i in g.versions()}, graph=g)
+    return sol
+
+
+def min_max_recreation_under_budget(
+    g: VersionGraph,
+    budget: float,
+    *,
+    tol: float = 1e-3,
+    max_iters: int = 48,
+) -> StorageSolution:
+    """Problem 4: min max_i R_i subject to C ≤ budget — bisection on θ fed to
+    `modified_prim` (the paper notes "the solution for Problem 4 is similar").
+    """
+    dist, _ = dijkstra(g, weight="phi")
+    lo = max(dist[i] for i in g.versions())  # SPT bound: best achievable max R
+    base = minimum_storage_tree(g)
+    if base.storage_cost() > budget + 1e-9:
+        raise InfeasibleError("budget below minimum storage cost")
+    hi = base.max_recreation()
+    best: Optional[StorageSolution] = None
+    # check the ideal point first
+    try:
+        sol = modified_prim(g, lo * (1 + 1e-12))
+        if sol.storage_cost() <= budget + 1e-9:
+            return sol
+    except InfeasibleError:
+        pass
+    for _ in range(max_iters):
+        mid = 0.5 * (lo + hi)
+        try:
+            sol = modified_prim(g, mid)
+            feasible = sol.storage_cost() <= budget + 1e-9
+        except InfeasibleError:
+            feasible = False
+        if feasible:
+            best, hi = sol, mid
+        else:
+            lo = mid
+        if hi - lo <= tol * max(1.0, lo):
+            break
+    if best is None:
+        best = base  # MST/MCA always fits the budget
+    return best

@@ -1,0 +1,49 @@
+"""Shortest-path tree (paper Problem 2, Lemma 3) — Dijkstra from the dummy root.
+
+The SPT minimizes every ``R_i`` simultaneously: path lengths are measured in
+``Φ`` (recreation cost).  Works for directed and undirected instances alike
+(undirected instances simply have both edge directions revealed).
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, Optional, Tuple
+
+from ..version_graph import StorageSolution, VersionGraph
+
+
+def shortest_path_tree(
+    g: VersionGraph, *, weight: str = "phi"
+) -> StorageSolution:
+    dist, parent = dijkstra(g, weight=weight)
+    missing = [i for i in g.versions() if i not in parent]
+    if missing:
+        raise ValueError(f"versions unreachable from root: {missing[:8]}")
+    return StorageSolution(parent={i: parent[i] for i in g.versions()}, graph=g)
+
+
+def dijkstra(
+    g: VersionGraph, *, weight: str = "phi", source: int = 0
+) -> Tuple[Dict[int, float], Dict[int, int]]:
+    """Single-source shortest paths over the chosen cost component.
+
+    Returns ``(dist, parent)``; ``parent`` excludes the source itself.
+    """
+    dist: Dict[int, float] = {source: 0.0}
+    parent: Dict[int, int] = {}
+    done = set()
+    pq: list = [(0.0, source)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if u in done:
+            continue
+        done.add(u)
+        for v, c in g.out_edges(u):
+            w = c.phi if weight == "phi" else c.delta
+            nd = d + w
+            if v not in dist or nd < dist[v] - 1e-15:
+                dist[v] = nd
+                parent[v] = u
+                heapq.heappush(pq, (nd, v))
+    return dist, parent

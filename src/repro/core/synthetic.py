@@ -1,0 +1,222 @@
+"""Synthetic dataset-versioning workload generator (paper §5.1).
+
+Two-step approach, exactly as the paper describes:
+
+1. generate a *version graph* with the desired shape, controlled by
+   ``commits``, ``branch_interval``, ``branch_prob``, ``branch_limit``,
+   ``branch_length`` (merges close a fraction of branches back to trunk);
+2. generate versions' *contents* and derive Δ/Φ from them.
+
+Contents are modelled as sets of content blocks (block id → size).  Each
+commit applies edit commands to its parent — add / delete / modify blocks —
+mirroring the paper's six CSV edit instructions at block granularity.  Deltas
+are then *measured* from the block sets:
+
+* directed Δ_ij  = Σ size(blocks in j \\ i) + per-edit overhead
+  (what must be stored to turn V_i into V_j);
+* undirected Δ_ij = Σ size(sym-diff) + overhead — a metric, so the paper's
+  §3 triangle inequalities hold by construction;
+* Φ = Δ · io_factor for the proportional scenarios, or Δ · per-edge random
+  compute factor for Scenario 3 (Φ ≠ Δ, e.g. compressed deltas).
+
+Presets `dc_like` / `lc_like` reproduce the flat/linear shapes of the paper's
+DC and LC datasets (at configurable scale); deltas are revealed within a
+``reveal_hops`` BFS radius of the version graph, like the paper's 10/25-hop
+matrices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Set, Tuple
+
+from .version_graph import VersionGraph
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    commits: int = 200
+    branch_interval: int = 5
+    branch_prob: float = 0.4
+    branch_limit: int = 3
+    branch_length: int = 8
+    merge_prob: float = 0.3
+    # content model
+    init_blocks: int = 400
+    block_size_mean: float = 2048.0
+    edit_rate: float = 0.05          # fraction of blocks touched per commit
+    grow_rate: float = 0.01          # net growth per commit
+    edit_overhead: float = 64.0      # bytes of bookkeeping per stored delta
+    # cost model
+    io_factor: float = 1.0           # Φ = io_factor·Δ when proportional
+    phi_independent: bool = False    # Scenario 3: Φ ≠ Δ
+    compute_factor_range: Tuple[float, float] = (0.2, 5.0)
+    reveal_hops: int = 10
+    directed: bool = True
+    seed: int = 0
+
+
+def dc_like(n: int = 200, seed: int = 0, **kw) -> WorkloadSpec:
+    """Densely-connected: frequent short branches (paper's DC shape)."""
+    return WorkloadSpec(
+        commits=n, branch_interval=3, branch_prob=0.7, branch_limit=4,
+        branch_length=4, reveal_hops=10, seed=seed, **kw,
+    )
+
+
+def lc_like(n: int = 200, seed: int = 0, **kw) -> WorkloadSpec:
+    """Linear-chain: rare, long branches (paper's LC shape)."""
+    return WorkloadSpec(
+        commits=n, branch_interval=25, branch_prob=0.2, branch_limit=1,
+        branch_length=40, reveal_hops=25, seed=seed, **kw,
+    )
+
+
+@dataclasses.dataclass
+class SyntheticWorkload:
+    graph: VersionGraph
+    version_dag: Dict[int, List[int]]      # derivation edges (parents per version)
+    sizes: Dict[int, float]                # full size of each version
+    blocks: Optional[Dict[int, Dict[int, float]]] = None
+
+
+def generate(spec: WorkloadSpec) -> SyntheticWorkload:
+    rng = random.Random(spec.seed)
+
+    # ---------------------------------------------------------------- step 1
+    # version DAG: trunk + branches (+ occasional merges)
+    parents: Dict[int, List[int]] = {1: []}
+    trunk = [1]
+    open_branches: List[List[int]] = []
+    next_id = 2
+    while next_id <= spec.commits:
+        # advance trunk
+        v = next_id
+        next_id += 1
+        parents[v] = [trunk[-1]]
+        trunk.append(v)
+        # maybe branch off
+        if len(trunk) % spec.branch_interval == 0 and rng.random() < spec.branch_prob:
+            n_branches = rng.randint(1, spec.branch_limit)
+            for _ in range(n_branches):
+                if next_id > spec.commits:
+                    break
+                length = rng.randint(1, spec.branch_length)
+                prev = trunk[-1]
+                branch = []
+                for _ in range(length):
+                    if next_id > spec.commits:
+                        break
+                    b = next_id
+                    next_id += 1
+                    parents[b] = [prev]
+                    branch.append(b)
+                    prev = b
+                if branch:
+                    open_branches.append(branch)
+        # maybe merge a finished branch into trunk
+        if open_branches and rng.random() < spec.merge_prob and next_id <= spec.commits:
+            branch = open_branches.pop(rng.randrange(len(open_branches)))
+            m = next_id
+            next_id += 1
+            parents[m] = [trunk[-1], branch[-1]]
+            trunk.append(m)
+
+    n = len(parents)
+
+    # ---------------------------------------------------------------- step 2
+    # contents: block sets evolved by edit commands
+    blocks: Dict[int, Dict[int, float]] = {}
+    block_id = [0]
+
+    def new_block() -> Tuple[int, float]:
+        block_id[0] += 1
+        size = max(64.0, rng.gauss(spec.block_size_mean, spec.block_size_mean / 4))
+        return block_id[0], size
+
+    for v in sorted(parents):
+        ps = parents[v]
+        if not ps:
+            blk = dict(new_block() for _ in range(spec.init_blocks))
+        else:
+            base = dict(blocks[ps[0]])
+            if len(ps) > 1:  # merge: union of parents
+                for b, s in blocks[ps[1]].items():
+                    base.setdefault(b, s)
+            n_edit = max(1, int(len(base) * spec.edit_rate))
+            ids = list(base)
+            # modify: delete + re-add as new ids
+            for b in rng.sample(ids, min(n_edit, len(ids))):
+                del base[b]
+                nb, s = new_block()
+                base[nb] = s
+            # net growth: linear in the base size (compounding on the current
+            # size explodes exponentially over long histories)
+            for _ in range(max(0, int(spec.init_blocks * spec.grow_rate))):
+                nb, s = new_block()
+                base[nb] = s
+            blk = base
+        blocks[v] = blk
+
+    sizes = {v: sum(blk.values()) for v, blk in blocks.items()}
+
+    # ------------------------------------------------------------- reveal Δ/Φ
+    g = VersionGraph(n, directed=spec.directed)
+
+    def phi_of(delta: float) -> float:
+        if spec.phi_independent:
+            lo, hi = spec.compute_factor_range
+            return delta * rng.uniform(lo, hi)
+        return delta * spec.io_factor
+
+    for v in g.versions():
+        g.set_materialization(v, sizes[v], phi_of(sizes[v]))
+
+    # BFS within reveal_hops over the *undirected* version DAG
+    adj: Dict[int, Set[int]] = {v: set() for v in parents}
+    for v, ps in parents.items():
+        for p in ps:
+            adj[v].add(p)
+            adj[p].add(v)
+
+    revealed = set()
+    for src in g.versions():
+        frontier = {src}
+        seen = {src}
+        for _ in range(spec.reveal_hops):
+            frontier = {y for x in frontier for y in adj[x]} - seen
+            seen |= frontier
+            if not frontier:
+                break
+        for dst in seen - {src}:
+            key = (src, dst) if spec.directed else (min(src, dst), max(src, dst))
+            if key in revealed:
+                continue
+            revealed.add(key)
+            a, b = blocks[src], blocks[dst]
+            fwd = sum(s for bid, s in b.items() if bid not in a)
+            if spec.directed:
+                d = fwd + spec.edit_overhead
+                g.set_delta(src, dst, d, phi_of(d))
+                bwd = sum(s for bid, s in a.items() if bid not in b) + spec.edit_overhead
+                if (dst, src) not in revealed:
+                    revealed.add((dst, src))
+                    g.set_delta(dst, src, bwd, phi_of(bwd))
+            else:
+                bwd = sum(s for bid, s in a.items() if bid not in b)
+                d = fwd + bwd + spec.edit_overhead
+                g.set_delta(src, dst, d, phi_of(d))
+
+    dag = {v: list(ps) for v, ps in parents.items()}
+    return SyntheticWorkload(graph=g, version_dag=dag, sizes=sizes, blocks=blocks)
+
+
+def zipf_weights(n: int, exponent: float = 2.0, seed: int = 0) -> Dict[int, float]:
+    """Zipfian access frequencies over versions (paper Fig. 16 workload)."""
+    rng = random.Random(seed)
+    ranks = list(range(1, n + 1))
+    rng.shuffle(ranks)
+    raw = [1.0 / (r ** exponent) for r in ranks]
+    z = sum(raw)
+    return {i + 1: raw[i] / z for i in range(n)}

@@ -1,0 +1,218 @@
+"""Version graphs and storage/recreation cost matrices (paper §2.1).
+
+A :class:`VersionGraph` holds ``n`` versions ``V_1..V_n`` plus the dummy
+source ``V_0`` (index 0).  Edges carry ``(delta, phi)`` pairs:
+
+* edge ``(0, i)``  — materialization:  ``delta = Δ_ii`` (full storage bytes),
+  ``phi = Φ_ii`` (full retrieval cost);
+* edge ``(i, j)``, ``i != 0`` — delta storage: ``delta = Δ_ij`` bytes of the
+  diff recreating ``V_j`` from ``V_i``, ``phi = Φ_ij`` cost of applying it.
+
+The matrices are *sparse*: entries never revealed (paper's "—") are simply
+absent.  ``directed=False`` means every revealed off-diagonal entry is usable
+in both directions (symmetric deltas, paper Scenario 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+Edge = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeCost:
+    """Storage bytes and recreation cost of one edge of ``G``."""
+
+    delta: float
+    phi: float
+
+
+class VersionGraph:
+    """The augmented graph ``G`` of paper §2.2 (versions + dummy root)."""
+
+    def __init__(self, n_versions: int, *, directed: bool = True) -> None:
+        if n_versions <= 0:
+            raise ValueError("need at least one version")
+        self.n = n_versions
+        self.directed = directed
+        # adjacency: src -> {dst: EdgeCost}; vertex ids 0..n (0 = dummy root)
+        self._adj: List[Dict[int, EdgeCost]] = [dict() for _ in range(n_versions + 1)]
+        self._radj: List[Dict[int, EdgeCost]] = [dict() for _ in range(n_versions + 1)]
+
+    # ------------------------------------------------------------------ build
+    def set_materialization(self, i: int, delta: float, phi: float) -> None:
+        """Record ``Δ_ii``/``Φ_ii`` (edge from the dummy root)."""
+        self._check_version(i)
+        self._put(0, i, EdgeCost(float(delta), float(phi)))
+
+    def set_delta(self, i: int, j: int, delta: float, phi: float) -> None:
+        """Record ``Δ_ij``/``Φ_ij`` — recreate ``V_j`` from ``V_i``."""
+        self._check_version(i)
+        self._check_version(j)
+        if i == j:
+            raise ValueError("use set_materialization for the diagonal")
+        self._put(i, j, EdgeCost(float(delta), float(phi)))
+        if not self.directed:
+            self._put(j, i, EdgeCost(float(delta), float(phi)))
+
+    def _put(self, i: int, j: int, c: EdgeCost) -> None:
+        self._adj[i][j] = c
+        self._radj[j][i] = c
+
+    def _check_version(self, i: int) -> None:
+        if not 1 <= i <= self.n:
+            raise ValueError(f"version id {i} out of range 1..{self.n}")
+
+    # ------------------------------------------------------------------ query
+    def cost(self, i: int, j: int) -> Optional[EdgeCost]:
+        return self._adj[i].get(j)
+
+    def materialization_cost(self, i: int) -> Optional[EdgeCost]:
+        return self._adj[0].get(i)
+
+    def out_edges(self, i: int) -> Iterator[Tuple[int, EdgeCost]]:
+        return iter(self._adj[i].items())
+
+    def in_edges(self, j: int) -> Iterator[Tuple[int, EdgeCost]]:
+        return iter(self._radj[j].items())
+
+    def edges(self) -> Iterator[Tuple[int, int, EdgeCost]]:
+        for i, nbrs in enumerate(self._adj):
+            for j, c in nbrs.items():
+                yield i, j, c
+
+    @property
+    def n_edges(self) -> int:
+        return sum(len(nbrs) for nbrs in self._adj)
+
+    def vertices(self) -> range:
+        """All vertex ids including the dummy root 0."""
+        return range(self.n + 1)
+
+    def versions(self) -> range:
+        return range(1, self.n + 1)
+
+    def has_all_materializations(self) -> bool:
+        return all(i in self._adj[0] for i in self.versions())
+
+    # -------------------------------------------------------------- validation
+    def check_triangle_inequality(self, *, tol: float = 1e-9) -> List[str]:
+        """Best-effort check of the paper §3 triangle inequalities on revealed
+        entries (only meaningful for symmetric Δ=Φ instances).  Returns a list
+        of human-readable violations (empty = consistent)."""
+        bad: List[str] = []
+        diag = {i: c.delta for i, c in self._adj[0].items()}
+        for p, q, cpq in self.edges():
+            if p == 0:
+                continue
+            # |Δpp - Δpq| <= Δqq <= Δpp + Δpq
+            dp, dq = diag.get(p), diag.get(q)
+            if dp is not None and dq is not None:
+                if not (abs(dp - cpq.delta) - tol <= dq <= dp + cpq.delta + tol):
+                    bad.append(f"diag triangle violated at ({p},{q})")
+            for w, cqw in self.out_edges(q):
+                if w in (0, p):
+                    continue
+                cpw = self.cost(p, w)
+                if cpw is None:
+                    continue
+                if cpw.delta > cpq.delta + cqw.delta + tol:
+                    bad.append(f"edge triangle violated at ({p},{q},{w})")
+        return bad
+
+
+# ---------------------------------------------------------------------- trees
+@dataclasses.dataclass
+class StorageSolution:
+    """A storage graph: ``parent[i]`` for every version ``i`` (paper's P).
+
+    ``parent[i] == 0`` means ``V_i`` is materialized; otherwise ``V_i`` is
+    stored as a delta from ``V_{parent[i]}``.  Lemma 1: any valid solution is a
+    spanning tree of ``G`` rooted at the dummy vertex 0.
+    """
+
+    parent: Dict[int, int]
+    graph: VersionGraph
+
+    # -- structure ---------------------------------------------------------
+    def validate(self) -> None:
+        g = self.graph
+        if set(self.parent) != set(g.versions()):
+            raise ValueError("solution must assign a parent to every version")
+        for i, p in self.parent.items():
+            if p != 0 and g.cost(p, i) is None:
+                raise ValueError(f"edge ({p},{i}) not revealed in graph")
+            if p == 0 and g.materialization_cost(i) is None:
+                raise ValueError(f"no materialization cost for {i}")
+        # acyclicity / reachability from root
+        seen = set()
+        for i in g.versions():
+            path = []
+            v = i
+            while v != 0 and v not in seen:
+                path.append(v)
+                v = self.parent[v]
+                if len(path) > g.n:
+                    raise ValueError("cycle detected in storage solution")
+            seen.update(path)
+
+    def children(self) -> Dict[int, List[int]]:
+        ch: Dict[int, List[int]] = {v: [] for v in self.graph.vertices()}
+        for i, p in self.parent.items():
+            ch[p].append(i)
+        return ch
+
+    def depth(self, i: int) -> int:
+        d = 0
+        while i != 0:
+            i = self.parent[i]
+            d += 1
+        return d
+
+    # -- costs (paper §2.1) --------------------------------------------------
+    def edge_cost(self, i: int) -> EdgeCost:
+        p = self.parent[i]
+        c = self.graph.materialization_cost(i) if p == 0 else self.graph.cost(p, i)
+        assert c is not None
+        return c
+
+    def storage_cost(self) -> float:
+        """Total storage C = Σ Δ over edges of the storage tree."""
+        return sum(self.edge_cost(i).delta for i in self.graph.versions())
+
+    def recreation_costs(self) -> Dict[int, float]:
+        """R_i for every version — Φ summed along the path from the root."""
+        memo: Dict[int, float] = {0: 0.0}
+
+        def rec(i: int) -> float:
+            if i not in memo:
+                memo[i] = rec(self.parent[i]) + self.edge_cost(i).phi
+            return memo[i]
+
+        return {i: rec(i) for i in self.graph.versions()}
+
+    def sum_recreation(self, weights: Optional[Dict[int, float]] = None) -> float:
+        rc = self.recreation_costs()
+        if weights is None:
+            return sum(rc.values())
+        return sum(rc[i] * weights.get(i, 0.0) for i in rc)
+
+    def max_recreation(self) -> float:
+        return max(self.recreation_costs().values())
+
+    def materialized(self) -> List[int]:
+        return sorted(i for i, p in self.parent.items() if p == 0)
+
+    def edges(self) -> Iterable[Tuple[int, int]]:
+        return ((p, i) for i, p in self.parent.items())
+
+    def summary(self) -> str:
+        return (
+            f"storage={self.storage_cost():.6g} "
+            f"sum_rec={self.sum_recreation():.6g} "
+            f"max_rec={self.max_recreation():.6g} "
+            f"materialized={len(self.materialized())}/{self.graph.n}"
+        )

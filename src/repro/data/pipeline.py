@@ -1,0 +1,139 @@
+"""Deterministic, resumable, host-sharded token pipeline.
+
+Production invariants this implements:
+
+* **determinism** — batch ``i`` of host ``h`` is a pure function of
+  (seed, i, h): restarts and elastic re-host-counts replay identically;
+* **checkpointable state** — the iterator state is a tiny pytree committed
+  to the version store next to the weights, so restore resumes mid-epoch
+  with no data loss or repetition;
+* **versioned corpora** — a dataset is a set of shard payloads in the
+  VersionStore; switching corpus versions (cleaning/dedup/mixture updates)
+  is a version-graph checkout, and storage is delta-optimized like any
+  other artifact (the paper's "Data Science Dataset Versions" scenario).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from ..store import VersionStore
+
+
+@dataclasses.dataclass
+class PipelineState:
+    step: int = 0
+    epoch: int = 0
+
+    def to_dict(self) -> Dict[str, int]:
+        return {"step": self.step, "epoch": self.epoch}
+
+    @classmethod
+    def from_dict(cls, d) -> "PipelineState":
+        return cls(step=int(d["step"]), epoch=int(d["epoch"]))
+
+
+class SyntheticTokenPipeline:
+    """Seeded synthetic LM batches (markov-ish stream with local structure,
+    so cross-entropy actually decreases during the example runs)."""
+
+    def __init__(
+        self,
+        *,
+        vocab: int,
+        seq_len: int,
+        global_batch: int,
+        host_id: int = 0,
+        n_hosts: int = 1,
+        seed: int = 0,
+        state: Optional[PipelineState] = None,
+    ) -> None:
+        assert global_batch % n_hosts == 0
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.local_batch = global_batch // n_hosts
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.seed = seed
+        self.state = state or PipelineState()
+
+    def _batch_rng(self, step: int) -> np.random.RandomState:
+        return np.random.RandomState(
+            (self.seed * 1_000_003 + step * 65_537 + self.host_id) % (2**31)
+        )
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        rng = self._batch_rng(self.state.step)
+        B, S, V = self.local_batch, self.seq_len, self.vocab
+        # structured stream: short arithmetic token runs + repeats => learnable
+        starts = rng.randint(0, V, size=(B, 1))
+        deltas = rng.randint(1, 4, size=(B, 1))
+        ramp = (starts + deltas * np.arange(S)[None, :]) % V
+        noise_mask = rng.rand(B, S) < 0.1
+        noise = rng.randint(0, V, size=(B, S))
+        tokens = np.where(noise_mask, noise, ramp).astype(np.int32)
+        self.state.step += 1
+        return {"tokens": tokens}
+
+    # resumability -----------------------------------------------------------
+    def snapshot(self) -> Dict[str, int]:
+        return self.state.to_dict()
+
+    def restore(self, snap: Dict[str, int]) -> None:
+        self.state = PipelineState.from_dict(snap)
+
+
+class VersionedDatasetPipeline:
+    """Reads tokenized shards from a VersionStore version (a committed
+    dataset), host-sharded and resumable."""
+
+    def __init__(
+        self,
+        store: VersionStore,
+        version_id: int,
+        *,
+        seq_len: int,
+        global_batch: int,
+        host_id: int = 0,
+        n_hosts: int = 1,
+        state: Optional[PipelineState] = None,
+    ) -> None:
+        self.store = store
+        self.version_id = version_id
+        flat = store.checkout(version_id)
+        shards = [flat[k] for k in sorted(flat) if k.startswith("shard")]
+        if not shards:
+            raise ValueError("dataset version has no 'shard*' arrays")
+        stream = np.concatenate([s.reshape(-1) for s in shards]).astype(np.int32)
+        self.stream = stream
+        self.seq_len = seq_len
+        self.local_batch = global_batch // n_hosts
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.state = state or PipelineState()
+        self.tokens_per_batch = self.local_batch * (seq_len + 1)
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        n = self.stream.size
+        need = self.tokens_per_batch
+        # host-interleaved contiguous windows
+        offset = (
+            (self.state.step * self.n_hosts + self.host_id) * need
+        ) % max(1, n - need)
+        window = self.stream[offset : offset + need]
+        tokens = window[: self.local_batch * self.seq_len].reshape(
+            self.local_batch, self.seq_len
+        )
+        self.state.step += 1
+        if (self.state.step * self.n_hosts * need) // max(1, n) > self.state.epoch:
+            self.state.epoch += 1
+        return {"tokens": tokens.copy()}
+
+    def snapshot(self) -> Dict[str, int]:
+        return {**self.state.to_dict(), "dataset_version": self.version_id}
+
+    def restore(self, snap) -> None:
+        self.state = PipelineState.from_dict(snap)

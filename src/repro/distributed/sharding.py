@@ -1,0 +1,164 @@
+"""Logical-axis sharding (MaxText-style rules table).
+
+Model code never names mesh axes: tensors are annotated with *logical* axes
+("batch", "embed", "heads", "experts", ...) and a rules table maps those to
+mesh axes.  One code path therefore lowers every (arch × shape × mesh) cell;
+switching the parallelism layout = switching the rules table — which is how
+the §Perf hillclimb iterates sharding without touching model code.
+
+Divisibility fallback: a logical axis whose dimension does not divide the
+mapped mesh axes is silently replicated (e.g. kv_heads=8 on a 16-way model
+axis, or batch=1 on the long-context cell) — matching what production
+frameworks do rather than erroring.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+# data-parallel submesh: "pod" is the slowest axis so DP gradients reduce
+# hierarchically (intra-pod reduce-scatter, inter-pod all-reduce).
+DP_AXES = ("pod", "data")
+
+DEFAULT_RULES: Rules = {
+    "batch": DP_AXES,
+    "seq": None,
+    "kv_seq": None,
+    "embed": DP_AXES,        # weights' d_model dim => FSDP (ZeRO-3 style)
+    "act_embed": None,       # activations' d_model dim stays unsharded
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",
+    "experts_ep": ("data", "model"),  # EP: experts stationary over the mesh
+    "expert_fsdp": ("pod",),          # EP weights' inner dim: ZeRO-3 over pod
+    "expert_mlp": None,
+    "lru": "model",
+    "lora": None,
+    "conv": None,
+    "stack": None,           # the scanned layer axis
+    None: None,
+}
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Rules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def logical_sharding(mesh: Mesh, rules: Optional[Rules] = None):
+    """Activate sharding annotations inside model code."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, dict(rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def mesh_axis_size(mesh: Mesh, axes: Union[None, str, Tuple[str, ...]]) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a] if a in mesh.shape else 1
+    return size
+
+
+def spec_for(
+    logical_axes: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+    *,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Rules] = None,
+    strict: bool = True,
+) -> P:
+    """PartitionSpec for a tensor given its logical axes.
+
+    ``strict=True`` (jit argument shardings) requires even divisibility —
+    pjit rejects uneven input shards.  ``strict=False`` (activation
+    constraints) only requires dim ≥ mesh extent: GSPMD pads uneven
+    *intermediate* shardings, which is how 36-head attention still runs
+    16-way TP (ceil(36/16)=3 heads/device).
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules or DEFAULT_RULES
+    out = []
+    used: set = set()
+    for i, ax in enumerate(logical_axes):
+        mapped = rules.get(ax, None)
+        if mapped is None:
+            out.append(None)
+            continue
+        axes_t = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        axes_t = tuple(a for a in axes_t if mesh is None or a in mesh.shape)
+        if not axes_t or any(a in used for a in axes_t):
+            out.append(None)
+            continue
+        if shape is not None and mesh is not None:
+            # degrade gracefully: drop leading axes until the dim divides
+            # (e.g. experts=16 on ("data","model") -> ("model",))
+            while axes_t:
+                size = mesh_axis_size(mesh, axes_t)
+                bad = (shape[i] % size != 0) if strict else (shape[i] < size)
+                if not bad:
+                    break
+                axes_t = axes_t[1:]
+            if not axes_t:
+                out.append(None)
+                continue
+        used.update(axes_t)
+        out.append(axes_t if len(axes_t) > 1 else axes_t[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate an activation inside jit; no-op outside logical_sharding()."""
+    if _CTX.mesh is None:
+        return x
+    spec = spec_for(logical_axes, x.shape, strict=False)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec)
+    )
+
+
+def tree_spec(
+    logical_tree: Any,
+    shape_tree: Any,
+    *,
+    mesh: Mesh,
+    rules: Optional[Rules] = None,
+) -> Any:
+    """Map a pytree of logical-axis tuples (+ matching ShapeDtypeStructs) to
+    NamedShardings — this builds jit's in_shardings/out_shardings."""
+    rules = rules or DEFAULT_RULES
+
+    def one(axes, sds):
+        return NamedSharding(
+            mesh, spec_for(axes, sds.shape, mesh=mesh, rules=rules)
+        )
+
+    return jax.tree.map(
+        one, logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )

@@ -1,0 +1,89 @@
+"""Pallas TPU kernels: changed-block detection + block content hashing.
+
+These feed the store's block-sparse delta encoder (DESIGN.md §5): the
+changed-block mask selects which 4 KiB blocks of a new checkpoint shard
+actually differ from the delta base, and the block hash provides dedup hints
+for content addressing.  Both are single-pass VMEM reductions over the
+(num_blocks, 8, 128) int32 block layout; outputs are (num_blocks, 1) so the
+minor dim stays TPU-friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS_PER_PROGRAM = 256
+
+
+def _mask_kernel(a_ref, b_ref, o_ref):
+    diff = a_ref[...] != b_ref[...]
+    o_ref[...] = jnp.any(diff, axis=(1, 2))[:, None].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_program", "interpret"))
+def changed_block_mask(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    rows_per_program: int = DEFAULT_ROWS_PER_PROGRAM,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(num_blocks, 1) int32 mask of blocks where ``a`` and ``b`` differ."""
+    assert a.shape == b.shape and a.dtype == b.dtype == jnp.int32
+    nb = a.shape[0]
+    rows = min(rows_per_program, nb)
+    grid = (pl.cdiv(nb, rows),)
+    in_spec = pl.BlockSpec((rows,) + a.shape[1:], lambda i: (i, 0, 0))
+    out_spec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+
+
+def _hash_kernel(x_ref, coef_ref, o_ref):
+    prod = x_ref[...] * coef_ref[...]
+    o_ref[...] = jnp.sum(prod, axis=(1, 2), dtype=jnp.int32)[:, None]
+
+
+def hash_coefficients(seed: int = 0x9E3779B9) -> np.ndarray:
+    """Deterministic odd per-position multipliers for the block hash."""
+    rng = np.random.RandomState(seed & 0x7FFFFFFF)
+    coef = rng.randint(0, 2**31, size=(8, 128), dtype=np.int64)
+    coef = (coef * 2 + 1).astype(np.int64)  # odd => position-bijective
+    return coef.astype(np.uint32).view(np.int32).reshape(8, 128)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_program", "interpret"))
+def block_hash(
+    x: jnp.ndarray,
+    coef: jnp.ndarray,
+    *,
+    rows_per_program: int = DEFAULT_ROWS_PER_PROGRAM,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(num_blocks, 1) int32 position-weighted hash per 4 KiB block."""
+    assert x.dtype == jnp.int32 and coef.shape == x.shape[1:]
+    nb = x.shape[0]
+    rows = min(rows_per_program, nb)
+    grid = (pl.cdiv(nb, rows),)
+    in_spec = pl.BlockSpec((rows,) + x.shape[1:], lambda i: (i, 0, 0))
+    coef_spec = pl.BlockSpec(coef.shape, lambda i: (0, 0))
+    out_spec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        _hash_kernel,
+        grid=grid,
+        in_specs=[in_spec, coef_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        interpret=interpret,
+    )(x, coef)

@@ -1,0 +1,147 @@
+"""Public jit'd wrappers around the delta-path kernels.
+
+Converts arbitrary tensors (any dtype/shape) to and from the canonical
+``(num_blocks, 8, 128)`` int32 block layout, and exposes the encode/apply
+operations the store uses:
+
+* :func:`to_blocks` / :func:`from_blocks` — byte-preserving (bitcast + pad)
+  layout conversion;
+* :func:`xor_encode` / :func:`xor_apply` — the paper's XOR delta variant;
+* :func:`sparse_encode` / :func:`sparse_apply` — block-sparse delta:
+  changed-block mask (Pallas), compaction to (idx, blocks), scattered apply
+  (Pallas).  Capacity is rounded up to a power of two so jit recompiles stay
+  bounded when the number of changed blocks varies between commits.
+
+On this CPU container all kernels run with ``interpret=True`` (the kernel
+body executes under the Pallas interpreter); on TPU the same call sites flip
+``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .block_diff import block_hash, changed_block_mask, hash_coefficients
+from .ref import BLOCK_BYTES, BLOCK_ELEMS
+from .sparse_apply import sparse_delta_apply
+from .xor_delta import xor_delta
+
+INTERPRET = True  # flipped to False on real TPU backends
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMeta:
+    """Everything needed to reverse :func:`to_blocks`."""
+
+    dtype: str
+    shape: Tuple[int, ...]
+    nbytes: int
+    num_blocks: int
+
+
+def to_blocks(x: jnp.ndarray) -> Tuple[jnp.ndarray, BlockMeta]:
+    """View a tensor's bytes as (num_blocks, 8, 128) int32, zero-padded."""
+    nbytes = x.size * x.dtype.itemsize
+    flat_u8 = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint8).reshape(-1)
+    pad = (-nbytes) % BLOCK_BYTES
+    if pad:
+        flat_u8 = jnp.concatenate([flat_u8, jnp.zeros((pad,), jnp.uint8)])
+    num_blocks = (nbytes + pad) // BLOCK_BYTES
+    as_i32 = jax.lax.bitcast_convert_type(
+        flat_u8.reshape(-1, 4), jnp.int32
+    ).reshape(num_blocks, 8, 128)
+    meta = BlockMeta(str(x.dtype), tuple(x.shape), nbytes, num_blocks)
+    return as_i32, meta
+
+
+def from_blocks(blocks: jnp.ndarray, meta: BlockMeta) -> jnp.ndarray:
+    """Inverse of :func:`to_blocks`."""
+    flat_u8 = jax.lax.bitcast_convert_type(
+        blocks.reshape(-1), jnp.uint8
+    ).reshape(-1)[: meta.nbytes]
+    dtype = jnp.dtype(meta.dtype)
+    itemsize = dtype.itemsize
+    if itemsize > 1:
+        flat = jax.lax.bitcast_convert_type(flat_u8.reshape(-1, itemsize), dtype)
+    else:
+        flat = jax.lax.bitcast_convert_type(flat_u8, dtype)
+    return flat.reshape(meta.shape)
+
+
+# ------------------------------------------------------------------ XOR delta
+def xor_encode(base_blocks: jnp.ndarray, new_blocks: jnp.ndarray) -> jnp.ndarray:
+    return xor_delta(base_blocks, new_blocks, interpret=INTERPRET)
+
+
+def xor_apply(base_blocks: jnp.ndarray, delta_blocks: jnp.ndarray) -> jnp.ndarray:
+    return xor_delta(base_blocks, delta_blocks, interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------- block hash
+_COEF = None
+
+
+def block_hashes(blocks: jnp.ndarray) -> jnp.ndarray:
+    global _COEF
+    if _COEF is None:
+        _COEF = jnp.asarray(hash_coefficients())
+    return block_hash(blocks, _COEF, interpret=INTERPRET)[:, 0]
+
+
+# --------------------------------------------------------- block-sparse delta
+def _round_capacity(k: int) -> int:
+    cap = 8
+    while cap < k:
+        cap *= 2
+    return cap
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _compact(mask: jnp.ndarray, new_blocks: jnp.ndarray, capacity: int):
+    """Pack changed block rows into (idx[capacity], blocks[capacity]).
+
+    Padding slots are *collision-free by construction*: they point at the
+    first unchanged row (where new == base, so a redundant write is a no-op),
+    or — when every row changed — at row 0 carrying row 0's new content (a
+    redundant write of correct data).  The apply kernel therefore never needs
+    conditional stores for slots emitted by this function.
+    """
+    m = mask[:, 0].astype(jnp.int32)
+    nb = m.shape[0]
+    order = jnp.cumsum(m) - 1  # destination slot per changed row
+    slots = jnp.where(m == 1, order, capacity)  # unchanged -> dropped
+    pad_row = jnp.argmin(m).astype(jnp.int32)  # first unchanged row (0 if none)
+    idx = jnp.full((capacity,), -1, jnp.int32)
+    idx = idx.at[slots].set(jnp.arange(nb, dtype=jnp.int32), mode="drop")
+    idx = jnp.where(idx >= 0, idx, pad_row)
+    gathered = new_blocks[idx]
+    return idx, gathered, jnp.sum(m)
+
+
+def sparse_encode(
+    base_blocks: jnp.ndarray, new_blocks: jnp.ndarray, *, capacity: int | None = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Return (idx, packed_blocks, n_changed) for the block-sparse delta.
+
+    With ``capacity=None`` the exact changed count is materialized host-side
+    (store/commit path, off the step-critical path); pass an explicit capacity
+    for fully-traced use.
+    """
+    mask = changed_block_mask(base_blocks, new_blocks, interpret=INTERPRET)
+    if capacity is None:
+        n_changed = int(jnp.sum(mask[:, 0]))
+        capacity = _round_capacity(max(1, n_changed))
+    idx, blocks, n = _compact(mask, new_blocks, capacity)
+    return idx, blocks, int(n)
+
+
+def sparse_apply(
+    base_blocks: jnp.ndarray, packed_blocks: jnp.ndarray, idx: jnp.ndarray
+) -> jnp.ndarray:
+    return sparse_delta_apply(base_blocks, packed_blocks, idx, interpret=INTERPRET)

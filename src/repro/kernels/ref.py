@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the delta-path Pallas kernels.
+
+Everything operates on the canonical *block layout*: a tensor's backing bytes
+are viewed as ``(num_blocks, 8, 128)`` int32 — one storage block is exactly
+one TPU VMEM tile (8 sublanes × 128 lanes × 4 B = 4 KiB).  The paper's delta
+variants map onto this layout:
+
+* XOR delta (paper §2.1 "an XOR between the two versions can be an
+  appropriate delta");
+* block-sparse delta (cell/line-level differences at block granularity):
+  a changed-block mask, the packed changed blocks, and their indices.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BLOCK_SHAPE = (8, 128)
+BLOCK_ELEMS = BLOCK_SHAPE[0] * BLOCK_SHAPE[1]
+BLOCK_BYTES = BLOCK_ELEMS * 4
+
+
+def xor_delta_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Bitwise delta between two same-shape int32 block arrays.
+
+    Self-inverse: ``xor_delta_ref(a, xor_delta_ref(a, b)) == b``.
+    """
+    return jnp.bitwise_xor(a, b)
+
+
+def changed_block_mask_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(num_blocks, 1) int32 mask: 1 where a block differs anywhere."""
+    diff = a != b
+    return jnp.any(diff, axis=(1, 2), keepdims=False)[:, None].astype(jnp.int32)
+
+
+def block_hash_ref(x: jnp.ndarray, coef: jnp.ndarray) -> jnp.ndarray:
+    """(num_blocks, 1) int32 position-weighted multiplicative hash.
+
+    ``coef`` is an (8, 128) int32 array of odd per-position multipliers; the
+    hash is Σ x[s,l]·coef[s,l] with int32 wraparound.  Used as a dedup *hint*
+    (the store verifies candidate matches bytewise).
+    """
+    prod = x * coef[None, :, :]
+    return jnp.sum(prod, axis=(1, 2), dtype=jnp.int32)[:, None]
+
+
+def sparse_delta_apply_ref(
+    base: jnp.ndarray, blocks: jnp.ndarray, idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Scatter packed delta blocks into a copy of ``base``.
+
+    base   : (num_blocks, 8, 128) int32
+    blocks : (k, 8, 128) int32 packed changed blocks
+    idx    : (k,) int32 destination block rows; negative = padding (dropped)
+    """
+    # negative indices would *wrap* under numpy semantics; remap padding to an
+    # out-of-bounds row so mode="drop" actually drops it.
+    safe = jnp.where(idx < 0, base.shape[0], idx)
+    return base.at[safe].set(blocks, mode="drop")

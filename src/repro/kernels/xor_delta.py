@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: XOR delta encode/apply (paper's XOR delta variant).
+
+Pure bandwidth kernel: reads two HBM streams, writes one.  Tiled so each
+program instance moves ``rows_per_program`` 4 KiB storage blocks through
+VMEM; the (8, 128) minor dims are exactly one int32 VMEM tile, so the MXU is
+idle and the VPU runs at line rate — the roofline is HBM bandwidth
+(3 streams × N bytes / 819 GB/s on v5e).
+
+The kernel is its own inverse (a ^ (a ^ b) == b), so encode and apply share
+the implementation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS_PER_PROGRAM = 256  # 256 blocks × 4 KiB × 3 streams = 3 MiB VMEM
+
+
+def _xor_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.bitwise_xor(a_ref[...], b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_program", "interpret"))
+def xor_delta(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    rows_per_program: int = DEFAULT_ROWS_PER_PROGRAM,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """a ^ b over (num_blocks, 8, 128) int32 block arrays."""
+    assert a.shape == b.shape and a.dtype == b.dtype == jnp.int32, (a.shape, a.dtype)
+    nb = a.shape[0]
+    rows = min(rows_per_program, nb)
+    grid = (pl.cdiv(nb, rows),)
+    spec = pl.BlockSpec((rows,) + a.shape[1:], lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _xor_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,314 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds ShapeDtypeStruct inputs (no allocation) and NamedShardings from
+     the logical-axis rules,
+  2. ``jax.jit(step).lower(...).compile()`` against the production mesh —
+     16×16 single-pod and 2×16×16 multi-pod,
+  3. prints ``compiled.memory_analysis()`` (fits-per-device proof) and the
+     loop-aware roofline terms (hlo_analysis — see that module for why raw
+     cost_analysis is insufficient),
+  4. emits one JSON record per cell (consumed by EXPERIMENTS.md tooling).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out dryrun_results.jsonl
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES
+from ..configs.base import ModelConfig, ShapeSpec
+from ..distributed.sharding import (
+    DEFAULT_RULES,
+    logical_sharding,
+    tree_spec,
+)
+from ..models.registry import count_params, get_model
+from ..training.optimizer import OptimizerConfig
+from ..training.train_loop import TrainConfig, make_train_step
+from .hlo_analysis import analyze_hlo
+from .input_specs import (
+    cache_specs,
+    decode_token_specs,
+    param_specs,
+    train_batch_specs,
+)
+from .mesh import make_production_mesh
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+def default_rules() -> Dict:
+    rules = dict(DEFAULT_RULES)
+    rules["kv_seq"] = "model"  # decode caches shard their seq axis over TP
+    return rules
+
+
+def _logits_sharding(cfg: ModelConfig, shape: ShapeSpec, mesh, rules):
+    from ..distributed.sharding import spec_for
+
+    spec = spec_for(
+        ("batch", None, "vocab"),
+        (shape.global_batch, 1, cfg.padded_vocab),
+        mesh=mesh, rules=rules, strict=True,
+    )
+    return NamedSharding(mesh, spec)
+
+
+def _opt_state_specs(param_sds: Any, param_axes: Any):
+    f32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), param_sds
+    )
+    return (
+        {"mu": f32, "nu": f32, "step": jax.ShapeDtypeStruct((), jnp.int32)},
+        {"mu": param_axes, "nu": param_axes, "step": ()},
+    )
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    rules: Optional[Dict] = None,
+    tcfg: Optional[TrainConfig] = None,
+    mla_compressed: bool = False,
+    moe_impl: str = "dispatch",
+    rwkv_impl: str = "scan",
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    cfg = ARCHS[arch]
+    import dataclasses as _dc
+    if mla_compressed and cfg.q_lora_rank:
+        cfg = _dc.replace(cfg, mla_compressed_cache=True)
+    if moe_impl != "dispatch" and cfg.n_experts:
+        cfg = _dc.replace(cfg, moe_impl=moe_impl)
+    if rwkv_impl != "scan" and cfg.family == "ssm":
+        cfg = _dc.replace(cfg, rwkv_impl=rwkv_impl)
+    shape = SHAPES[shape_name]
+    if shape_name not in cfg.supported_shapes:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "unsupported (per-spec skip, see DESIGN.md §7)"}
+    rules = rules or default_rules()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = get_model(cfg)
+    t0 = time.time()
+
+    param_sds, param_axes = param_specs(bundle)
+    param_sh = tree_spec(param_axes, param_sds, mesh=mesh, rules=rules)
+    repl = NamedSharding(mesh, P())
+
+    with logical_sharding(mesh, rules):
+        if shape.kind == "train":
+            # grad_accum=4: production microbatching — peak activation memory
+            # (the per-layer saved-carry stacks) drops 4x; global batch fixed.
+            tcfg = tcfg or TrainConfig(optimizer=OptimizerConfig(), grad_accum=4)
+            step_fn = make_train_step(bundle, tcfg)
+            batch_sds, batch_axes = train_batch_specs(cfg, shape)
+            batch_sh = tree_spec(batch_axes, batch_sds, mesh=mesh, rules=rules)
+            opt_sds, opt_axes = _opt_state_specs(param_sds, param_axes)
+            opt_sh = tree_spec(opt_axes, opt_sds, mesh=mesh, rules=rules)
+            state_sds = {"params": param_sds, "opt": opt_sds, "error_fb": None}
+            state_sh = {"params": param_sh, "opt": opt_sh, "error_fb": None}
+            metrics_sh = {"loss": repl, "lr": repl, "grad_norm": repl}
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, metrics_sh),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            batch_sds, batch_axes = train_batch_specs(cfg, shape)
+            batch_sh = tree_spec(batch_axes, batch_sds, mesh=mesh, rules=rules)
+            cache_sds, cache_axes_ = cache_specs(bundle, shape)
+            cache_sh = tree_spec(cache_axes_, cache_sds, mesh=mesh, rules=rules)
+            logits_sh = _logits_sharding(cfg, shape, mesh, rules)
+            jitted = jax.jit(
+                bundle.prefill,
+                in_shardings=(param_sh, batch_sh, cache_sh),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(param_sds, batch_sds, cache_sds)
+        else:  # decode
+            tok_sds, tok_axes = decode_token_specs(cfg, shape)
+            tok_sh = tree_spec(tok_axes, tok_sds, mesh=mesh, rules=rules)
+            cache_sds, cache_axes_ = cache_specs(bundle, shape)
+            cache_sh = tree_spec(cache_axes_, cache_sds, mesh=mesh, rules=rules)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            logits_sh = _logits_sharding(cfg, shape, mesh, rules)
+            jitted = jax.jit(
+                bundle.decode_step,
+                in_shardings=(param_sh, tok_sh, cache_sh, repl),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(param_sds, tok_sds, cache_sds, pos_sds)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_cost = analyze_hlo(compiled.as_text())
+
+    chips = 512 if multi_pod else 256
+    n_total = count_params(cfg)
+    n_active = count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch  # one step
+        model_flops = 2.0 * n_active * tokens
+
+    # hlo_cost is the per-device SPMD program => per-device seconds directly
+    compute_s = hlo_cost.flops / PEAK_FLOPS
+    memory_s = hlo_cost.bytes / HBM_BW
+    collective_s = hlo_cost.collective_bytes / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "args_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "peak_est_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9, 3
+            ),
+        },
+        "cost_analysis_raw": {
+            "flops": ca.get("flops"),
+            "bytes": ca.get("bytes accessed"),
+        },
+        "hlo_per_device": {
+            "flops": hlo_cost.flops,
+            "bytes": hlo_cost.bytes,
+            "collective_bytes": hlo_cost.collective_bytes,
+            "collectives": {k: v for k, v in sorted(hlo_cost.coll.items())},
+        },
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "bound_s": max(compute_s, memory_s, collective_s),
+        },
+        "model_flops": {
+            "n_params": n_total,
+            "n_active": n_active,
+            "tokens": tokens,
+            "model_flops_global": model_flops,
+            "useful_flops_ratio": (
+                model_flops / (hlo_cost.flops * chips)
+                if hlo_cost.flops else None
+            ),
+            "mfu_upper_bound": (
+                model_flops / chips / PEAK_FLOPS
+                / max(compute_s, memory_s, collective_s)
+                if max(compute_s, memory_s, collective_s) > 0 else None
+            ),
+        },
+        "skipped": False,
+    }
+    if verbose:
+        print(f"--- {arch} × {shape_name} × {rec['mesh']} ---")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+              f"temp={mem.temp_size_in_bytes/1e9:.2f}GB per device")
+        print(f"  roofline: compute={compute_s*1e3:.2f}ms memory={memory_s*1e3:.2f}ms "
+              f"collective={collective_s*1e3:.2f}ms -> {dominant}-bound")
+        print(f"  useful-flops ratio: {rec['model_flops']['useful_flops_ratio']:.3f}"
+              if rec["model_flops"]["useful_flops_ratio"] else "")
+        sys.stdout.flush()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--mla-compressed", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true")
+    ap.add_argument("--rwkv-chunked", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = []
+    if args.multi_pod or args.all:
+        meshes.append(True)
+    if args.single_pod or args.all or not (args.multi_pod or args.single_pod):
+        meshes.insert(0, False)
+
+    failures = 0
+    out_f = open(args.out, "a") if args.out else None
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    rec = lower_cell(
+                        arch, shape, multi_pod=multi,
+                        mla_compressed=args.mla_compressed,
+                        moe_impl="ep" if args.moe_ep else "dispatch",
+                        rwkv_impl="chunked" if args.rwkv_chunked else "scan")
+                except Exception as e:  # a failure here is a framework bug
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"!!! FAILED {arch} × {shape}: {e}")
+                if out_f:
+                    out_f.write(json.dumps(rec) + "\n")
+                    out_f.flush()
+                cells.append(rec)
+    done = sum(1 for c in cells if not c.get("skipped") and "error" not in c)
+    skipped = sum(1 for c in cells if c.get("skipped"))
+    print(f"\n=== dry-run: {done} compiled, {skipped} per-spec skips, "
+          f"{failures} failures ===")
+    if out_f:
+        out_f.close()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,427 @@
+"""Loop-aware roofline accounting over compiled HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits each instruction once —
+a ``lax.scan`` over 61 layers contributes its body FLOPs *once*, not 61×
+(verified empirically; see EXPERIMENTS.md §Dry-run notes).  Since the whole
+framework scans over layers (and microbatches), raw cost_analysis would be
+off by >60× on the deep archs.  This module walks the HLO computation graph
+from ENTRY, multiplying ``while`` bodies by their trip counts, and produces:
+
+* flops — 2·prod(result)·prod(contracting) for every dot (dominant);
+  ~1/elem for elementwise/reduce ops (operand-sized, via the symbol table);
+* bytes — result + operand bytes per (post-fusion) instruction: fusion
+  internals stay in registers, so call-site traffic is the HBM model;
+* collective_bytes — per collective type, max(result, operands) per op,
+  weighted by loop trip counts; ``-start``/``-done`` pairs deduplicated.
+
+CPU-backend HLO prints operand *names* without types, so a per-computation
+symbol table (instruction → result shapes) resolves operand sizes.  Trip
+counts come from the loop condition's s32/s64 constants — exact for
+lax.scan / fori_loop lowerings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_ARRAY_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z]\w*\[[\d,]*\]\S*)\s+([\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "tanh", "rsqrt", "sqrt", "power",
+    "log", "log-plus-one", "compare", "select", "and", "or", "xor", "not",
+    "negate", "abs", "sign", "floor", "ceil", "round-nearest-afz", "clamp",
+    "cosine", "sine", "atan2", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "is-finite", "erf",
+    "cbrt", "logistic", "tan",
+}
+_REDUCERS = {"reduce", "reduce-window", "select-and-scatter"}
+_MEMORY_OPS = {
+    "copy", "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "concatenate", "pad", "reshape", "transpose", "broadcast", "iota",
+    "convert", "bitcast-convert", "reverse", "slice", "sort", "map",
+    "copy-start", "copy-done",
+}
+_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "opt-barrier", "partition-id", "replica-id", "domain",
+    "rng-bit-generator", "rng-get-and-update-state", "custom-call",
+}
+
+
+def _shapes_of(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, List[int]]]) -> float:
+    total = 0.0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _elems_of(shapes: List[Tuple[str, List[int]]]) -> float:
+    total = 0.0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m,
+                    {k: v * m for k, v in self.coll.items()})
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    op: str
+    result: List[Tuple[str, List[int]]]
+    operands: List[str]
+    line: str
+
+
+def _parse(hlo: str):
+    """Split into computations; parse instructions + symbol tables."""
+    comps: Dict[str, List[_Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    body: List[_Instr] = []
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = re.match(r"(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
+            if m:
+                cur = m.group(2)
+                if m.group(1):
+                    entry = cur
+                body = []
+            continue
+        if line == "}" or line.startswith("} "):
+            comps[cur] = body
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        # operand section: from the op's '(' to its matching ')'
+        start = m.end() - 1
+        depth = 0
+        end = start
+        for i in range(start, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = line[start + 1 : end]
+        operands = _OPERAND_RE.findall(operand_str)
+        body.append(_Instr(name, op, _shapes_of(type_str), operands, line))
+    return comps, entry
+
+
+def _trip_count(instrs: List[_Instr]) -> int:
+    best = 1
+    for ins in instrs:
+        for m in re.finditer(r"s(?:32|64)\[\]\s+constant\((\d+)\)", ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def top_contributors(hlo: str, k: int = 20, key: str = "bytes"):
+    """Debug view: the k most expensive leaf instructions, weighted by loop
+    trip counts.  ``key`` ∈ {bytes, flops, coll}.  Returns rows of
+    (Cost, multiplier, op, line)."""
+    rows: list = []
+    analyze_hlo(hlo, _debug_rows=rows)
+    attr = "collective_bytes" if key == "coll" else key
+    rows.sort(key=lambda r: -getattr(r[0], attr))
+    return rows[:k]
+
+
+def analyze_hlo(hlo: str, _debug_rows: Optional[list] = None) -> Cost:
+    comps, entry = _parse(hlo)
+    if entry is None:
+        return Cost()
+    symtab: Dict[str, Dict[str, List[Tuple[str, List[int]]]]] = {
+        c: {i.name: i.result for i in instrs} for c, instrs in comps.items()
+    }
+    cache: Dict[str, Cost] = {}
+
+    def operand_shapes(comp: str, ins: _Instr):
+        out = []
+        for name in ins.operands:
+            shapes = symtab[comp].get(name)
+            if shapes:
+                out.extend(shapes)
+        return out
+
+    def attr_comp(line: str, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=%?([\w\.\-]+)", line)
+        return m.group(1) if m else None
+
+    def _fusion_result_bytes(ins: _Instr, callee: str) -> float:
+        """A fusion whose root is a dynamic-update-slice (possibly behind
+        precision converts) writes only the update slice, not the whole
+        buffer — the scan ``ys`` in-place pattern."""
+        callee_instrs = comps.get(callee, [])
+        by_name = {ci.name: ci for ci in callee_instrs}
+        root = next((ci for ci in callee_instrs if "ROOT" in ci.line), None)
+        depth = 0
+        while root is not None and depth < 4:
+            if root.op == "dynamic-update-slice":
+                per = [
+                    _bytes_of(by_name[n].result)
+                    for n in root.operands
+                    if n in by_name and _bytes_of(by_name[n].result) > 0
+                ]
+                per = [b for b in per if b < _bytes_of(root.result)]
+                if per:
+                    return min(per)
+                break
+            if root.op in ("convert", "bitcast", "copy") and root.operands:
+                nxt = by_name.get(root.operands[0])
+                root = nxt
+                depth += 1
+                continue
+            break
+        return _bytes_of(ins.result)
+
+    def _fusion_operand_bytes(comp: str, ins: _Instr, callee: str) -> float:
+        """Charge each fusion operand by what the fused body *touches*: a
+        parameter consumed only through (dynamic-)slice/gather reads only
+        the slice (e.g. one layer of a stacked (L, ...) scan buffer per
+        trip), not the whole operand.  Precision ``convert``/``bitcast``
+        chains are looked through — the CPU backend materializes f32 copies
+        of bf16 buffers around mixed-precision dots/updates that a TPU's MXU
+        handles natively (EXPERIMENTS.md §Dry-run notes)."""
+        total = 0.0
+        callee_instrs = comps.get(callee, [])
+        by_name = {ci.name: ci for ci in callee_instrs}
+        param_names = {}
+        for ci in callee_instrs:
+            if ci.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", ci.line)
+                if m:
+                    param_names[int(m.group(1))] = ci.name
+
+        def consumers_of(name):
+            return [ci for ci in callee_instrs if name in ci.operands]
+
+        def traffic(name: str, full: float, depth: int = 0) -> float:
+            """Charge for one value given how it is consumed; None-able."""
+            cons = consumers_of(name)
+            if not cons or depth > 4:
+                return full
+            charge = 0.0
+            for ci in cons:
+                if ci.op in ("dynamic-slice", "slice", "gather"):
+                    charge += _bytes_of(ci.result)
+                elif ci.op == "dynamic-update-slice":
+                    # in-place write: the update operand is the traffic
+                    per = [
+                        _bytes_of(by_name[n].result)
+                        for n in ci.operands
+                        if n in by_name and n != name and _bytes_of(by_name[n].result) > 0
+                    ]
+                    charge += 2.0 * (min(per) if per else full)
+                elif ci.op in ("convert", "bitcast", "copy"):
+                    charge += traffic(ci.name, full, depth + 1)
+                else:
+                    return full  # genuinely consumed whole
+            return min(charge, full * len(cons))
+
+        for idx, opname in enumerate(ins.operands):
+            full = _bytes_of(symtab[comp].get(opname, []))
+            pname = param_names.get(idx)
+            if pname is None or full == 0:
+                total += full
+            else:
+                total += traffic(pname, full)
+        return total
+
+    def cost_of(comp: str) -> Cost:
+        if comp in cache:
+            return cache[comp]
+        cache[comp] = Cost()  # cycle guard
+        total = Cost()
+        for ins in comps.get(comp, ()):
+            total += instr_cost(comp, ins)
+        cache[comp] = total
+        return total
+
+    def instr_cost(comp: str, ins: _Instr) -> Cost:
+        c = Cost()
+        op = ins.op
+        if op == "while":
+            body = attr_comp(ins.line, "body")
+            cond = attr_comp(ins.line, "condition")
+            trips = _trip_count(comps.get(cond, [])) if cond else 1
+            if body:
+                c += cost_of(body).scaled(trips)
+            if cond:
+                c += cost_of(cond).scaled(trips)
+            return c
+        if op in ("fusion", "call", "async-start"):
+            callee = attr_comp(ins.line, "calls") or attr_comp(ins.line, "to_apply")
+            if callee:
+                sub = cost_of(callee)
+                # fusion internals stay on-chip: charge flops + collectives,
+                # model HBM traffic as the call-site operands + results
+                c += Cost(flops=sub.flops, bytes=0.0, coll=dict(sub.coll))
+                c.bytes += _fusion_result_bytes(ins, callee)
+                c.bytes += _fusion_operand_bytes(comp, ins, callee)
+            else:
+                c.bytes += _bytes_of(ins.result) + _bytes_of(operand_shapes(comp, ins))
+            return c
+        if op == "conditional":
+            branches = re.findall(
+                r"(?:branch_computations=\{|true_computation=|false_computation=)"
+                r"%?([\w\.\-]+)", ins.line)
+            for br in branches:
+                c += cost_of(br)
+            c.bytes += _bytes_of(ins.result)
+            return c
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES:
+            if op.endswith("-done"):
+                return c
+            b = max(_bytes_of(ins.result), _bytes_of(operand_shapes(comp, ins)))
+            c.coll[base] = c.coll.get(base, 0.0) + b
+            c.bytes += b
+            return c
+        if op == "dot":
+            res_elems = _elems_of(ins.result)
+            k = 1.0
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+            ops_shapes = operand_shapes(comp, ins)
+            if m and m.group(1) and ops_shapes:
+                lhs = ops_shapes[0][1]
+                for d in m.group(1).split(","):
+                    di = int(d)
+                    if di < len(lhs):
+                        k *= lhs[di]
+            c.flops += 2.0 * res_elems * k
+            c.bytes += _bytes_of(ins.result) + _bytes_of(ops_shapes)
+            return c
+        if op == "convolution":
+            c.flops += 2.0 * _elems_of(ins.result)
+            c.bytes += _bytes_of(ins.result) + _bytes_of(operand_shapes(comp, ins))
+            return c
+        if op in _ELEMENTWISE or op in _REDUCERS:
+            opnd = operand_shapes(comp, ins)
+            c.flops += max(_elems_of(ins.result), _elems_of(opnd))
+            c.bytes += _bytes_of(ins.result) + _bytes_of(opnd)
+            return c
+        if op in ("dynamic-slice", "slice", "gather"):
+            # reads only the slice it produces (not the full operand)
+            c.bytes += 2.0 * _bytes_of(ins.result)
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            # in-place update: traffic ~ the update operand, not the buffer
+            per_op = [_bytes_of(symtab[comp].get(n, [])) for n in ins.operands]
+            per_op = [b for b in per_op if b > 0]
+            c.bytes += 2.0 * (min(per_op) if per_op else _bytes_of(ins.result))
+            return c
+        if op in ("broadcast", "iota"):
+            c.bytes += _bytes_of(ins.result)
+            return c
+        if op in _MEMORY_OPS:
+            c.bytes += _bytes_of(ins.result) + _bytes_of(operand_shapes(comp, ins))
+            return c
+        # unknown / skip ops contribute nothing
+        return c
+
+    total = cost_of(entry)
+
+    if _debug_rows is not None:
+        # attribute weighted costs to leaf instructions (debug/profiling view)
+        mult: Dict[str, float] = {entry: 1.0}
+
+        def walk(comp: str, m: float, seen: set) -> None:
+            if comp in seen:
+                return
+            for ins in comps.get(comp, ()):
+                if ins.op == "while":
+                    body = attr_comp(ins.line, "body")
+                    cond = attr_comp(ins.line, "condition")
+                    t = _trip_count(comps.get(cond, [])) if cond else 1
+                    for sub in (body, cond):
+                        if sub:
+                            mult[sub] = mult.get(sub, 0.0) + m * t
+                            walk(sub, m * t, seen | {comp})
+                elif ins.op in ("fusion", "call", "conditional", "async-start"):
+                    callee = attr_comp(ins.line, "calls") or attr_comp(ins.line, "to_apply")
+                    if callee:
+                        mult[callee] = mult.get(callee, 0.0) + m
+                        walk(callee, m, seen | {comp})
+
+        walk(entry, 1.0, set())
+        for comp, instrs in comps.items():
+            m = mult.get(comp, 0.0)
+            if not m:
+                continue
+            for ins in instrs:
+                if ins.op == "while":
+                    continue
+                if ins.op in ("fusion", "call", "async-start"):
+                    callee = attr_comp(ins.line, "calls") or attr_comp(
+                        ins.line, "to_apply")
+                    if callee:
+                        b = (_fusion_result_bytes(ins, callee)
+                             + _fusion_operand_bytes(comp, ins, callee))
+                    else:
+                        b = _bytes_of(ins.result)
+                    c = Cost(bytes=b)
+                else:
+                    c = instr_cost(comp, ins)
+                if c.flops or c.bytes or c.coll:
+                    _debug_rows.append((c.scaled(m), m, ins.op, ins.line[:140]))
+
+    return total

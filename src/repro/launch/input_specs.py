@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape × step-kind) cell.
+
+No device allocation: the dry-run lowers/compiles against these specs only.
+Returns (specs, logical_axes) pairs so the launcher can derive shardings
+from the same rules table the model uses.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models.registry import ModelBundle
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Dict, Dict]:
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {"tokens": SDS((B, S), jnp.int32)}
+    axes: Dict[str, Any] = {"tokens": ("batch", "seq")}
+    if cfg.is_encdec:
+        specs["frames"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        axes["frames"] = ("batch", "seq", "act_embed")
+    return specs, axes
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Dict, Dict]:
+    return train_batch_specs(cfg, shape)
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Any, Any]:
+    B = shape.global_batch
+    return SDS((B, 1), jnp.int32), ("batch", None)
+
+
+def cache_specs(bundle: ModelBundle, shape: ShapeSpec) -> Tuple[Any, Any]:
+    """Decode-cache ShapeDtypeStructs via eval_shape (no allocation)."""
+    cfg = bundle.cfg
+    B, S = shape.global_batch, shape.seq_len
+
+    def build():
+        if cfg.is_encdec:
+            return bundle.init_cache(B, S, enc_len=S)
+        return bundle.init_cache(B, S)
+
+    cache = jax.eval_shape(build)
+    axes = bundle.cache_axes(cache)
+    return cache, axes
+
+
+def param_specs(bundle: ModelBundle) -> Tuple[Any, Any]:
+    params = jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0)))
+    return params, bundle.param_axes(params)

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (never module-level) so importing this module touches no jax
+device state.  Shapes: single pod = (16, 16) = 256 chips (data × model);
+multi-pod = (2, 16, 16) = 512 chips with the extra leading "pod" axis —
+data parallelism spans ("pod", "data"), tensor/expert parallelism "model".
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1×1 mesh over the local device (tests/examples)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
+    )

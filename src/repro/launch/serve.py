@@ -1,0 +1,48 @@
+"""Serving driver: load (or init) a model, run batched generation.
+
+CPU-runnable on reduced configs; the dry-run exercises the pod-scale
+prefill/decode lowering of the very same bundle functions.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS
+from ..models.registry import get_model
+from ..serving.engine import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="minicpm-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced()
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(
+        bundle, params,
+        max_len=args.prompt_len + args.max_new_tokens,
+        batch=args.batch, temperature=args.temperature,
+    )
+    rng = np.random.RandomState(0)
+    batch = {"tokens": rng.randint(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)}
+    if cfg.is_encdec:
+        batch["frames"] = rng.randn(args.batch, args.prompt_len, cfg.d_model).astype(np.float32)
+    res = engine.generate(batch, max_new_tokens=args.max_new_tokens)
+    tps = res.steps * args.batch / max(res.decode_s, 1e-9)
+    print(f"[serve] {args.arch}: prefill {res.prefill_s*1e3:.1f}ms, "
+          f"{res.steps} decode steps, {tps:.1f} tok/s (CPU, reduced config)")
+    print("[serve] sample tokens:", res.tokens[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .registry import ModelBundle, count_params, get_model
+
+__all__ = ["get_model", "ModelBundle", "count_params"]

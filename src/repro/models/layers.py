@@ -1,0 +1,225 @@
+"""Shared model building blocks: norms, RoPE, MLPs, attention variants.
+
+Conventions:
+* params are plain nested dicts of jnp arrays (bf16 weights);
+* math that affects stability (norms, softmax, rotary, recurrences) runs
+  f32 and is cast back;
+* every block takes/returns (B, S, D) activations;
+* attention is **chunked/online-softmax** (flash-style lax.scan over KV
+  chunks) so prefill at 32k never materializes (S, S) scores;
+* sliding-window attention uses the exact block-local form (block = window,
+  attend to self + previous block) — O(S·W) not O(S²).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import shard
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def group_norm_heads(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+                     eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head LayerNorm over head_dim (RWKV's ln_x)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_table(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for positions (any shape) -> (..., dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, hd); cos/sin: (B?, S, hd/2) broadcastable."""
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    if cos.ndim == 2:    # (S, hd/2) -> (1, S, 1, hd/2)
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    elif cos.ndim == 3:  # (B, S, hd/2) -> (B, S, 1, hd/2)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- MLPs
+def mlp_swiglu(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def mlp_gelu(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+# ---------------------------------------------------- chunked flash attention
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def chunked_attention(
+    q: jnp.ndarray,          # (B, Sq, H, hd)
+    k: jnp.ndarray,          # (B, Sk, KV, hd)
+    v: jnp.ndarray,          # (B, Sk, KV, hd)
+    *,
+    causal: bool,
+    q_offset: jnp.ndarray | int = 0,   # global position of q[0]
+    kv_len: Optional[jnp.ndarray] = None,  # #valid kv entries (decode caches)
+    chunk: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in chunks of ``chunk``
+    (default 1024; override via REPRO_ATTN_CHUNK — a §Perf knob: larger
+    chunks cut online-softmax carry traffic at the cost of score-buffer
+    memory).
+
+    Supports GQA (H a multiple of KV) and ragged caches via ``kv_len``.
+    Returns (B, Sq, H, hd) in q.dtype.
+    """
+    if chunk is None:
+        import os as _os
+        chunk = int(_os.environ.get("REPRO_ATTN_CHUNK", "1024"))
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    hd_v = v.shape[-1]  # MLA: v head dim differs from q/k
+    g = H // KV
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, g, hd)
+
+    if Sq == 1:
+        # decode: one unchunked softmax over the cache — GSPMD turns this
+        # into flash-decoding when the cache's seq axis is sharded (partial
+        # max/sum + small all-reduces) instead of all-gathering K/V.
+        # bf16 matmul + f32 accumulation: never materialize an f32 cache.
+        qh = qf.astype(q.dtype)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qh, k,
+                       preferred_element_type=jnp.float32)
+        k_pos = jnp.arange(Sk)
+        limit = jnp.broadcast_to(jnp.asarray(Sk if kv_len is None else kv_len), (B,))
+        mask = k_pos[None, :] < limit[:, None]
+        if causal:
+            q_pos = jnp.asarray(q_offset) + jnp.zeros((Sq,), jnp.int32)
+            mask = mask[:, None, :] & (k_pos[None, None, :] <= q_pos[None, :, None])
+        else:
+            mask = mask[:, None, :]
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(q.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, hd_v).transpose(1, 0, 2, 3, 4)
+
+    q_pos = (jnp.asarray(q_offset) + jnp.arange(Sq))[None, :]  # (1, Sq)
+    limit = jnp.asarray(Sk if kv_len is None else kv_len)
+    limit = jnp.broadcast_to(limit, (B,))
+
+    qh = qf.astype(q.dtype)  # bf16 operand; f32 accumulation via the dot
+
+    def step(carry, inp):
+        m, l, o = carry
+        ci, kb, vb = inp
+        # scores: (B, Sq, KV, g, chunk)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qh, kb,
+                       preferred_element_type=jnp.float32)
+        k_pos = ci * chunk + jnp.arange(chunk)  # (chunk,)
+        valid = k_pos[None, :] < limit[:, None]  # (B, chunk)
+        mask = valid[:, None, :]  # (B, 1, chunk)
+        if causal:
+            mask = mask & (k_pos[None, None, :] <= q_pos[:, :, None])
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(q.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        o_new = o * corr[..., None] + pv
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, Sq, KV, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, g), jnp.float32)
+    o0 = jnp.zeros((B, Sq, KV, g, hd_v), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        step, (m0, l0, o0), (jnp.arange(n_chunks), kc, vc)
+    )
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+def block_local_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, window: int,
+    softmax_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Exact sliding-window causal attention, O(S·W).
+
+    Queries in block i attend to keys in blocks {i-1, i} with the mask
+    ``q_pos - window < k_pos <= q_pos`` — identical to a causal sliding
+    window of width ``window`` when blocks are window-sized.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    W = window
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    nb = -(-S // W)
+    pad = nb * W - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = (q.astype(jnp.float32) * scale).reshape(B, nb, W, KV, g, hd)
+    kb = k.reshape(B, nb, W, KV, hd)
+    vb = v.reshape(B, nb, W, KV, hd)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # (B, nb, 2W, KV, hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    s = jnp.einsum("bnqkgd,bnckd->bnqkgc", qb.astype(q.dtype), k2,
+                   preferred_element_type=jnp.float32)
+    q_pos = jnp.arange(W)[:, None]          # within-block query pos
+    k_pos = jnp.arange(2 * W)[None, :] - W  # relative to block start
+    block = jnp.arange(nb)
+    # global positions: q = n*W + q_pos; k = n*W + k_pos
+    causal = k_pos <= q_pos
+    in_window = k_pos > q_pos - W
+    first_block_valid = (k_pos >= 0)[None, :, :] | (block[:, None, None] > 0)
+    mask = (causal & in_window)[None, :, :] & first_block_valid  # (nb, W, 2W)
+    s = jnp.where(mask[None, :, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnqkgc,bnckd->bnqkgd", p.astype(q.dtype), v2,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, nb * W, H, hd)[:, :S]
+    return o.astype(q.dtype)

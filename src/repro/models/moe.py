@@ -1,0 +1,105 @@
+"""Mixture-of-Experts with scatter-based dispatch (TPU-native, DESIGN.md §10).
+
+No GShard one-hot dispatch einsums: position-in-expert comes from a cumsum
+over a (tokens, E) one-hot, tokens are scattered into per-expert capacity
+buffers, experts run as one stacked einsum (EP: experts sharded over
+"model"), and results gather back with routing weights.  Capacity overflow
+drops tokens (standard dropping MoE, capacity_factor configurable);
+dropped tokens fall through via the residual connection.
+
+Shapes (per layer):
+  x        (B, S, D)
+  router   (D, E)
+  experts  w_gate/w_up (E, D, F), w_down (E, F, D)
+  buffers  (B, E, C, D) with C = ceil(S·top_k·cf / E)   [B = dispatch groups]
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def capacity(cfg: ModelConfig, seq: int) -> int:
+    c = math.ceil(seq * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(1, c)
+
+
+def _expert_ffn(blocks: jnp.ndarray, p: Params) -> jnp.ndarray:
+    """blocks: (B, E, C, D) -> (B, E, C, D), stacked SwiGLU per expert."""
+    h = jnp.einsum("becd,edf->becf", blocks, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", blocks, p["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(blocks.dtype) * u
+    return jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+
+def moe_block(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+
+    # ---- routing ----------------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, K)           # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    top_w = top_w.astype(x.dtype)
+
+    # ---- position-in-expert (cumsum over the sequence, per expert) --------
+    # one-hot over experts for each of the K choices, summed -> (B, S, E)
+    sel = jax.nn.one_hot(top_e, E, dtype=jnp.int32).sum(axis=2)
+    pos_base = jnp.cumsum(sel, axis=1) - sel          # tokens before s, per e
+    # within-token ordering of the K choices hitting the same expert
+    k_onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)      # (B,S,K,E)
+    intra = jnp.cumsum(k_onehot, axis=2) - k_onehot            # (B,S,K,E)
+    pos = (
+        jnp.take_along_axis(pos_base[:, :, None, :], top_e[..., None], axis=3)
+        + jnp.take_along_axis(intra, top_e[..., None], axis=3)
+    )[..., 0]                                                   # (B, S, K)
+
+    keep = pos < C
+    slot = jnp.where(keep, pos, C)                   # C = overflow bin
+
+    # ---- dispatch: scatter tokens into (B, E, C+1, D) ----------------------
+    buf = jnp.zeros((B, E, C + 1, D), x.dtype)
+    b_idx = jnp.arange(B)[:, None, None]
+    buf = buf.at[b_idx, top_e, slot].set(x[:, :, None, :], mode="drop")
+    buf = shard(buf[:, :, :C], "batch", "experts", None, None)
+
+    # ---- expert compute (EP over "model") ----------------------------------
+    out_buf = _expert_ffn(buf, p)
+    out_buf = shard(out_buf, "batch", "experts", None, None)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((B, E, 1, D), out_buf.dtype)], axis=2
+    )
+
+    # ---- combine: gather + weighted sum over the K routes ------------------
+    gathered = out_buf[b_idx, top_e, slot]           # (B, S, K, D)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    y = jnp.einsum("bskd,bsk->bsd", gathered, top_w)
+
+    # ---- shared experts (DeepSeek) -----------------------------------------
+    if cfg.n_shared_experts:
+        hs = jnp.einsum("bsd,df->bsf", x, p["shared_w_gate"])
+        us = jnp.einsum("bsd,df->bsf", x, p["shared_w_up"])
+        hs = jax.nn.silu(hs.astype(jnp.float32)).astype(x.dtype) * us
+        y = y + jnp.einsum("bsf,fd->bsd", hs, p["shared_w_down"])
+    return y
+
+
+def aux_load_balance_loss(cfg: ModelConfig, logits_f32: jnp.ndarray,
+                          top_e: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss (used by the train loop)."""
+    E = cfg.n_experts
+    gates = jax.nn.softmax(logits_f32, axis=-1)
+    me = gates.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(top_e[..., 0], E).mean(axis=(0, 1))
+    return E * jnp.sum(me * ce)

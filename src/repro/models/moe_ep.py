@@ -1,0 +1,176 @@
+"""Expert-parallel MoE via shard_map + all_to_all (the §Perf iteration).
+
+Why: with the pure-pjit scatter/gather dispatch (moe.py), GSPMD cannot infer
+a sharded layout for the combine gather at deepseek scale and falls back to
+*replicated* (B,S,K,D) intermediates with f32 all-reduces over the whole
+mesh — the dry-run measured 1.1e14 collective bytes/device/step (≈3000s of
+ICI time; EXPERIMENTS.md §Perf).  The fix is the layout every production
+MoE system uses: **experts stationary, tokens move**.
+
+Layout (inside one shard_map over the full mesh):
+  * activations arrive sharded batch→(pod, data) and seq→model — the model
+    axis carries sequence parallelism through the MoE, so all N = data×model
+    devices hold distinct tokens;
+  * expert weights are sharded E→(data, model) (1 expert/device at E=256;
+    per-device bytes = total/256 — same as FSDP, but **never regathered**);
+  * local routing → per-expert staging (E, c_loc, D) → ``all_to_all`` over
+    the EP axes → local expert FFN → ``all_to_all`` back → local combine.
+
+Per layer/microbatch the only collectives are the two all-to-alls
+(~tokens·k·cf·D/N bytes each) — ~100× less than the baseline's replicated
+all-reduces.  EP group = (data, model) when E divides data·model (deepseek),
+else (model,) (phi-3.5, E=16); "pod" stays pure DP (experts replicated
+across pods).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed import sharding as shlib
+
+Params = Dict[str, Any]
+
+
+def ep_axes_for(cfg: ModelConfig, mesh) -> Optional[Tuple[str, ...]]:
+    """Largest mesh-axis group the expert dim divides; None => fall back."""
+    names = mesh.axis_names
+    dm = tuple(a for a in ("data", "model") if a in names)
+    size_dm = 1
+    for a in dm:
+        size_dm *= mesh.shape[a]
+    if dm and cfg.n_experts % size_dm == 0:
+        return dm
+    if "model" in names and cfg.n_experts % mesh.shape["model"] == 0:
+        return ("model",)
+    return None
+
+
+def moe_block_ep(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Drop-in replacement for moe.moe_block using explicit EP collectives.
+
+    Requires an active logical_sharding context (mesh).  Shared experts run
+    outside the shard_map as a plain dense block.
+    """
+    mesh = shlib._CTX.mesh
+    if mesh is None:
+        return _moe_local(cfg, p, x)  # single-device path (tests)
+    ep = ep_axes_for(cfg, mesh)
+    if ep is None:
+        from .moe import moe_block  # arch whose E fits no axis: baseline
+
+        return moe_block(cfg, p, x)
+
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    n_ep = 1
+    for a in ep:
+        n_ep *= mesh.shape[a]
+    e_loc = E // n_ep
+
+    # batch stays sharded over every DP axis (the EP group is only the
+    # all_to_all communicator); seq additionally splits over "model" so all
+    # N devices hold distinct tokens (sequence parallelism through the MoE).
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    seq_ax = "model" if "model" in mesh.shape else None
+    x_spec = P(dp if dp else None, seq_ax, None)
+    # multi-pod: expert weights additionally ZeRO-3-shard their inner dim
+    # over "pod" at rest and are all-gathered inside the body per layer —
+    # otherwise 671B of experts would be pod-replicated (28 GB/dev args,
+    # measured) and never fit; the gather transpose reduce-scatters the
+    # gradients back over pod automatically.
+    pod_fsdp = "pod" in mesh.shape and "pod" not in ep
+    w_spec = P(ep, "pod", None) if pod_fsdp else P(ep, None, None)
+    router_spec = P(None, None)
+
+    b_loc = B
+    for a in dp:
+        b_loc //= mesh.shape[a]
+    s_loc = S // (mesh.shape["model"] if seq_ax else 1)
+    t_loc = b_loc * s_loc
+    c_loc = max(1, math.ceil(t_loc * K * cfg.capacity_factor / E))
+
+    def body(xb, router, wg, wu, wd):
+        # xb: (b_loc, s_loc, D); wg/wu: (e_loc, D, F); wd: (e_loc, F, D)
+        if pod_fsdp:  # ZeRO-3: regather this layer's experts over the pod axis
+            wg = jax.lax.all_gather(wg, "pod", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "pod", axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, "pod", axis=1, tiled=True)
+        xt = xb.reshape(t_loc, D)
+        logits = (xt @ router).astype(jnp.float32)          # (T, E)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(gates, K)               # (T, K)
+        top_w = (top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+                 ).astype(xb.dtype)
+
+        # position-in-expert over the flat (T*K) routing decisions
+        flat_e = top_e.reshape(-1)                           # (T*K,)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)          # before me, per e
+        slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = slot < c_loc
+        slot = jnp.where(keep, slot, c_loc)                  # overflow bin
+
+        # stage tokens per destination expert: (E, c_loc+1, D)
+        staging = jnp.zeros((E, c_loc + 1, D), xb.dtype)
+        tok_idx = jnp.repeat(jnp.arange(t_loc), K)
+        staging = staging.at[flat_e, slot].set(xt[tok_idx], mode="drop")
+        staging = staging[:, :c_loc]                         # (E, c, D)
+
+        # ---- tokens -> expert owners --------------------------------------
+        # (E, c, D) -> (n_ep senders, e_loc, c, D) on the owning device
+        recv = jax.lax.all_to_all(
+            staging.reshape(n_ep, e_loc, c_loc, D), ep, 0, 0, tiled=False
+        )  # (n_ep, e_loc, c, D): dim0 = sender rank
+        qs = recv.transpose(1, 0, 2, 3).reshape(e_loc, n_ep * c_loc, D)
+
+        # ---- local expert FFN ----------------------------------------------
+        h = jnp.einsum("exd,edf->exf", qs, wg)
+        u = jnp.einsum("exd,edf->exf", qs, wu)
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(qs.dtype) * u
+        out = jnp.einsum("exf,efd->exd", h, wd)              # (e_loc, n_ep*c, D)
+
+        # ---- back to token owners -------------------------------------------
+        back = out.reshape(e_loc, n_ep, c_loc, D).transpose(1, 0, 2, 3)
+        mine = jax.lax.all_to_all(back, ep, 0, 0, tiled=False)
+        # (n_ep, e_loc, c, D): dim0 = expert-owner rank == expert blocks
+        out_buf = mine.reshape(E, c_loc, D)
+        out_buf = jnp.concatenate(
+            [out_buf, jnp.zeros((E, 1, D), out_buf.dtype)], axis=1
+        )
+
+        # ---- combine ---------------------------------------------------------
+        gathered = out_buf[flat_e, slot]                     # (T*K, D)
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        y = jnp.einsum("tkd,tk->td",
+                       gathered.reshape(t_loc, K, D), top_w)
+        return y.reshape(b_loc, s_loc, D)
+
+    y = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(x_spec, router_spec, w_spec, w_spec, w_spec),
+        out_specs=x_spec,
+        check_rep=False,
+    )(x, p["router"].astype(x.dtype), p["w_gate"], p["w_up"], p["w_down"])
+
+    if cfg.n_shared_experts:
+        hs = jnp.einsum("bsd,df->bsf", x, p["shared_w_gate"])
+        us = jnp.einsum("bsd,df->bsf", x, p["shared_w_up"])
+        hs = jax.nn.silu(hs.astype(jnp.float32)).astype(x.dtype) * us
+        y = y + jnp.einsum("bsf,fd->bsd", hs, p["shared_w_down"])
+    return y
+
+
+def _moe_local(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """No-mesh fallback: identical math, single device (correctness tests)."""
+    from .moe import moe_block
+
+    return moe_block(cfg, p, x)

@@ -1,0 +1,269 @@
+"""Recurrent blocks: RG-LRU (Griffin/RecurrentGemma) and RWKV-6 (Finch).
+
+Both are sub-quadratic: O(S) train/prefill via scans, O(1)-state decode —
+they carry the ``long_500k`` cell.
+
+* RG-LRU block (arXiv:2402.19427): two linear branches from the input;
+  the recurrent branch runs conv1d(width 4) → RG-LRU; the gate branch is
+  GeLU; merged output projects back to d_model.  The RG-LRU recurrence
+      h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t),
+      a_t = exp(−c·softplus(Λ)·σ(W_a x_t))
+  is linear in h, so train/prefill use ``jax.lax.associative_scan``
+  (log-depth — a TPU-friendly departure from the sequential GPU scan,
+  recorded in DESIGN.md §5).
+
+* RWKV-6 (arXiv:2404.05892): data-dependent token-shift (LoRA), data-
+  dependent per-channel decay w_t, matrix-valued state per head
+      S_t = diag(w_t) S_{t-1} + kᵀ_t v_t,   out_t = r_t·(S_{t-1} + diag(u)kᵀ_t v_t)
+  Sequential ``lax.scan`` over time is the baseline; the chunked parallel
+  form is a §Perf iteration.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from .layers import Params, group_norm_heads, rms_norm
+
+
+# ================================================================== RG-LRU ==
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def _rglru_scan(a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t*h_{t-1} + bx_t via associative scan; returns (all h, last h).
+
+    a, bx: (B, S, W) f32; h0: (B, W) f32.
+    """
+    # fold h0 into the first step
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh, hh[:, -1]
+
+
+def rglru_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Core RG-LRU over a (B, S, W) branch input; returns (y, h_last)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,w->bsw", xf, p["a_gate"].astype(jnp.float32))
+                       + p["a_gate_bias"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,w->bsw", xf, p["i_gate"].astype(jnp.float32))
+                       + p["i_gate_bias"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    h, h_last = _rglru_scan(a, gated, h0.astype(jnp.float32))
+    return h.astype(x.dtype), h_last
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, buf: jnp.ndarray):
+    """Depthwise causal conv1d, width K.  x: (B,S,W); w: (K,W);
+    buf: (B,K-1,W) past inputs.  Returns (y, new_buf)."""
+    K = w.shape[0]
+    ext = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    y = sum(
+        ext[:, i : ext.shape[1] - (K - 1 - i)] * w[i][None, None, :]
+        for i in range(K)
+    )
+    new_buf = ext[:, -(K - 1):] if K > 1 else buf
+    return y, new_buf
+
+
+def rglru_block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                state: Dict | None) -> Tuple[jnp.ndarray, Dict]:
+    """Full Griffin recurrent block.  state: {"h": (B,W), "conv": (B,K-1,W)}."""
+    B, S, D = x.shape
+    W = cfg.lru_width
+    if state is None:
+        state = rglru_init_state(cfg, B)
+    xr = jnp.einsum("bsd,dw->bsw", x, p["w_rec_in"])
+    xg = jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"])
+    xr, conv_buf = _causal_conv(xr, p["conv_w"], state["conv"])
+    xr = shard(xr, "batch", "seq", "lru")
+    y, h_last = rglru_apply(cfg, p, xr, state["h"])
+    y = y * jax.nn.gelu(xg.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return out, {"h": h_last, "conv": conv_buf}
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), jnp.bfloat16),
+    }
+
+
+# ================================================================== RWKV-6 ==
+WKV_CHUNK = 32
+_LOG_DECAY_FLOOR = -2.5  # exp(2.5·32)≈5e34 stays inside f32; see _wkv_chunked
+
+
+def _wkv_chunked(r, k, v, w, u, s0):
+    """Chunked-parallel WKV (the §Perf iteration for the ssm family).
+
+    The sequential scan reads+writes the (B,H,64,64) f32 state per *token*
+    (dry-run: 85 s/step of HBM time at train_4k).  The chunked form scans
+    per *chunk* and turns intra-chunk work into MXU matmuls:
+
+        out_t = r̃_t·S_0 + [(r̃ k̃ᵀ) ⊙ strictly-causal] v + (Σ_d r u k)·v_t
+        S_L   = diag(e^{la_L})·(S_0 + k̃ᵀ v)
+      with la = cumsum(log w) (per channel), r̃_t = r_t·e^{la_{t-1}},
+           k̃_i = k_i·e^{-la_i}.
+
+    Per-step log-decay is clamped to ``_LOG_DECAY_FLOOR`` so e^{-la} stays
+    finite in f32 (same trick as flash-linear-attention); channels decaying
+    faster than e^{-2.5}/step are numerically dead past one step anyway.
+    All shapes (B, S, H, hd) f32; s0 (B, H, hd, hd).
+    """
+    B, S, H, hd = r.shape
+    L = WKV_CHUNK
+    nC = S // L
+    log_w = jnp.clip(jnp.log(jnp.maximum(w, 1e-38)), _LOG_DECAY_FLOOR, 0.0)
+
+    def to_chunks(x):
+        return x.reshape(B, nC, L, H, hd).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, log_w))
+    bonus_all = jnp.einsum("bshk,bshk->bsh", r * u[None, None], k)[..., None] * v
+    bonusc = to_chunks(bonus_all.reshape(B, S, H, hd))
+    mask = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :]).astype(jnp.float32)
+
+    def chunk_step(s, inp):
+        rb, kb, vb, lwb, bb = inp          # (B, L, H, hd)
+        la = jnp.cumsum(lwb, axis=1)       # inclusive
+        la_prev = la - lwb                 # exclusive
+        r_t = rb * jnp.exp(la_prev)
+        k_t = kb * jnp.exp(-la)
+        inter = jnp.einsum("blhk,bhkv->blhv", r_t, s)
+        scores = jnp.einsum("blhk,bmhk->bhlm", r_t, k_t)
+        intra = jnp.einsum("bhlm,bmhv->blhv", scores * mask[None, None], vb)
+        out = inter + intra + bb
+        kv = jnp.einsum("blhk,blhv->bhkv", k_t, vb)
+        s_new = (s + kv) * jnp.exp(la[:, -1])[..., None]  # la[:,-1]: (B,H,hd_k)
+        return s_new, out
+
+    s_final, outs = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lwc, bonusc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return out, s_final
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray) -> jnp.ndarray:
+    """x_{t-1} stream: shift right by one, seeding with `last`."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """RWKV-6 attention analogue.  state: {"s": (B,H,hd,hd) f32, "x_last": (B,D)}."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.rwkv_head_dim
+    # token-shift mixing in bf16 (the wkv core below stays f32): the 5-way
+    # (B,S,5,D) ddlerp tensors were the #2 HBM term at train_4k — §Perf/rwkv6
+    prev = _token_shift(x, state["x_last"].astype(x.dtype))
+    dx = prev - x
+
+    # data-dependent token shift (ddlerp, LoRA rank = rwkv_shift_lora)
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["shift_w1"],
+                               preferred_element_type=jnp.float32))
+    lora = lora.reshape(B, S, 5, cfg.rwkv_shift_lora).astype(x.dtype)
+    mix = jnp.einsum("bskr,krd->bskd", lora, p["shift_w2"])
+    mu = p["mu_rkvwg"].astype(x.dtype)  # (5, D)
+    xs = x[:, :, None, :] + dx[:, :, None, :] * (mu[None, None] + mix)
+    xr, xk, xv, xw, xg = [xs[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,dh->bsh", xr, p["w_r"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", xk, p["w_k"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,dh->bsh", xv, p["w_v"]).reshape(B, S, H, hd)
+    g = jnp.einsum("bsd,dh->bsh", xg, p["w_g"])
+
+    # data-dependent decay (LoRA rank rwkv_decay_lora) — f32: enters exp()
+    wl = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32),
+                             p["decay_w1"].astype(jnp.float32)))
+    w = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd", wl, p["decay_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w)).reshape(B, S, H, hd)    # per-channel decay in (0,1)
+
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if cfg.rwkv_impl == "chunked" and S % WKV_CHUNK == 0 and S > 1:
+        out, s_final = _wkv_chunked(rf, kf, vf, w, u,
+                                    state["s"].astype(jnp.float32))
+    else:
+        def step(s, inp):
+            rt, kt, vt, wt = inp  # (B,H,hd) each
+            kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hd,hd)
+            out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+            s = wt[..., :, None] * s + kv
+            return s, out
+
+        xs_t = lambda a: a.transpose(1, 0, 2, 3)  # (S,B,H,hd)
+        s_final, outs = jax.lax.scan(
+            step, state["s"].astype(jnp.float32),
+            (xs_t(rf), xs_t(kf), xs_t(vf), xs_t(w)),
+        )
+        out = outs.transpose(1, 0, 2, 3)                     # (B,S,H,hd)
+    out = group_norm_heads(out, p["ln_x_scale"].astype(jnp.float32).reshape(H, hd),
+                           p["ln_x_bias"].astype(jnp.float32).reshape(H, hd))
+    out = out.reshape(B, S, D).astype(x.dtype) * jax.nn.silu(
+        g.astype(jnp.float32)
+    ).astype(x.dtype)
+    y = jnp.einsum("bsd,dh->bsh", out, p["w_o"])
+    return y.astype(x.dtype), {"s": s_final, "x_last": x[:, -1]}
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                     state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """RWKV FFN (channel mix) with simple token shift.  state: {"x_last": (B,D)}."""
+    xf = x.astype(jnp.float32)
+    prev = _token_shift(xf, state["x_last"].astype(jnp.float32))
+    dx = prev - xf
+    xk = (xf + dx * p["ffn_mu_k"].astype(jnp.float32)).astype(x.dtype)
+    xr = (xf + dx * p["ffn_mu_r"].astype(jnp.float32)).astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["ffn_k"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    kk = shard(kk, "batch", "seq", "mlp")
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["ffn_v"])
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,dh->bsh", xr, p["ffn_r"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    return vv * rr, {"x_last": x[:, -1]}
+
+
+def rwkv_block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               state: Dict | None) -> Tuple[jnp.ndarray, Dict]:
+    B = x.shape[0]
+    if state is None:
+        state = rwkv_init_state(cfg, B)
+    a, st_t = rwkv_time_mix(cfg, p, rms_norm(x, p["norm1"], cfg.norm_eps),
+                            state["time"])
+    x = x + a
+    b, st_c = rwkv_channel_mix(cfg, p, rms_norm(x, p["norm2"], cfg.norm_eps),
+                               state["chan"])
+    return x + b, {"time": st_t, "chan": st_c}
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    H, hd = cfg.n_heads, cfg.rwkv_head_dim
+    return {
+        "time": {
+            "s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_last": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        },
+        "chan": {"x_last": jnp.zeros((batch, cfg.d_model), jnp.bfloat16)},
+    }

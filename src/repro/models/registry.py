@@ -1,0 +1,148 @@
+"""Arch registry: one ModelBundle API over every family.
+
+``get_model(cfg)`` returns a bundle of pure functions the launcher, trainer,
+server and dry-run all share.  Batches:
+
+* LM families:       {"tokens": (B, S) i32}  (+ labels handled by the trainer)
+* enc-dec (audio):   {"frames": (B, S_enc, D) bf16, "tokens": (B, S_dec) i32}
+
+``count_params`` derives N (total and active) analytically from the config —
+the roofline's MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import encdec as ed
+from . import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]
+    param_axes: Callable[[Any], Any]
+    train_logits: Callable[..., Any]     # (params, batch) -> (logits, aux)
+    train_hidden: Callable[..., Any]     # (params, batch) -> (hidden, aux)
+    head: Callable[..., Any]             # (params, hidden_chunk) -> logits
+    init_cache: Callable[..., Any]       # (batch, max_len, **kw) -> cache
+    cache_axes: Callable[[Any], Any]
+    prefill: Callable[..., Any]          # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable[..., Any]      # (params, token, cache, pos) -> ...
+
+
+def get_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.is_encdec:
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda rng: ed.init_params_encdec(cfg, rng),
+            param_axes=lambda p: ed.param_axes_encdec(cfg, p),
+            train_logits=lambda p, batch: ed.forward_train_encdec(
+                cfg, p, batch["frames"], batch["tokens"]
+            ),
+            train_hidden=lambda p, batch: ed.forward_hidden_encdec(
+                cfg, p, batch["frames"], batch["tokens"]
+            ),
+            head=lambda p, h: tf.lm_logits(cfg, p, h),
+            init_cache=lambda batch, max_len, enc_len=None: ed.init_cache_encdec(
+                cfg, batch, max_len, enc_len or max_len
+            ),
+            cache_axes=lambda c: {
+                "self": {
+                    "k": ("stack", "batch", "kv_seq", "kv_heads", None),
+                    "v": ("stack", "batch", "kv_seq", "kv_heads", None),
+                },
+                "enc_out": ("batch", "seq", "act_embed"),
+            },
+            prefill=lambda p, batch, cache: ed.prefill_encdec(
+                cfg, p, batch["frames"], batch["tokens"], cache
+            ),
+            decode_step=lambda p, tok, cache, pos: ed.decode_step_encdec(
+                cfg, p, tok, cache, pos
+            ),
+        )
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: tf.init_params(cfg, rng),
+        param_axes=lambda p: tf.param_axes(cfg, p),
+        train_logits=lambda p, batch: tf.forward_train(
+            cfg, p, batch["tokens"],
+            inputs_embeds=batch.get("inputs_embeds"),
+        ),
+        train_hidden=lambda p, batch: tf.forward_hidden(
+            cfg, p, batch["tokens"],
+            inputs_embeds=batch.get("inputs_embeds"),
+        ),
+        head=lambda p, h: tf.lm_logits(cfg, p, h),
+        init_cache=lambda batch, max_len, **kw: tf.init_cache(cfg, batch, max_len),
+        cache_axes=lambda c: tf.cache_axes(cfg, c),
+        prefill=lambda p, batch, cache: tf.prefill(
+            cfg, p, batch["tokens"], cache,
+            inputs_embeds=batch.get("inputs_embeds"),
+        ),
+        decode_step=lambda p, tok, cache, pos: tf.decode_step(cfg, p, tok, cache, pos),
+    )
+
+
+# --------------------------------------------------------------- param count
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    D, V, H, KV = cfg.d_model, cfg.vocab, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    total = V * D  # embedding
+    if not cfg.tie_embeddings:
+        total += D * V
+
+    def attn_p() -> int:
+        return D * H * hd + 2 * D * KV * hd + H * hd * D
+
+    def mla_p() -> int:
+        qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+        rd, nd, vd = cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
+        return (D * qr + qr * H * (nd + rd) + D * (kvr + rd)
+                + kvr * H * (nd + vd) + H * vd * D)
+
+    def mlp_p() -> int:
+        return (3 if cfg.mlp_kind == "swiglu" else 2) * D * cfg.d_ff
+
+    def moe_p(active: bool) -> int:
+        E, K, Fe = cfg.n_experts, cfg.top_k, cfg.expert_d_ff
+        routed = (K if active else E) * 3 * D * Fe
+        shared = cfg.n_shared_experts * 3 * D * Fe
+        return D * E + routed + shared
+
+    def rglru_p() -> int:
+        W = cfg.lru_width
+        return 3 * D * W + cfg.conv_width * W + 5 * W
+
+    def rwkv_p() -> int:
+        sl, dl = cfg.rwkv_shift_lora, cfg.rwkv_decay_lora
+        time = 5 * D * D + D * 5 * sl + 5 * sl * D + D * dl + dl * D
+        ffn = 2 * D * cfg.d_ff + D * D
+        return time + ffn
+
+    for i, kind in enumerate(cfg.blocks()):
+        if kind == "attn":
+            total += attn_p()
+        elif kind == "mla":
+            total += mla_p()
+        elif kind == "rglru":
+            total += rglru_p()
+        elif kind == "rwkv":
+            total += rwkv_p()
+            continue  # rwkv includes its ffn
+        if cfg.layer_uses_moe(i):
+            total += moe_p(active_only)
+        else:
+            total += mlp_p()
+    if cfg.is_encdec:
+        total += cfg.enc_layers * (attn_p() + mlp_p())
+        total += cfg.n_layers * attn_p()  # cross-attention stacks
+    if cfg.mtp:
+        total += 2 * D * D + attn_p() + mlp_p()
+    return int(total)

@@ -1,0 +1,493 @@
+"""Decoder LM spine shared by all 10 architectures.
+
+Layers are partitioned into **segments**: maximal runs of a repeating unit
+(e.g. RecurrentGemma's (rglru, rglru, attn) triple, DeepSeek's 3 dense +
+58 MoE split).  Each segment stacks its parameters over the repeat axis and
+executes under one ``lax.scan`` — compile time and HLO size are O(#segments),
+not O(#layers).  Per-layer remat (``jax.checkpoint``) wraps the scanned body
+in training.
+
+Block kinds: ``attn`` (GQA, optional sliding window), ``mla`` (DeepSeek),
+``rglru`` (Griffin), ``rwkv`` (RWKV-6).  All but ``rwkv`` pair with an MLP or
+MoE; ``rwkv`` carries its own channel-mix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import moe_ep as moe_ep_lib
+from . import recurrent as rec_lib
+from .layers import Params, mlp_gelu, mlp_swiglu, rms_norm
+
+
+# ------------------------------------------------------------------ segments
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    unit: Tuple[Tuple[str, bool], ...]  # ((kind, uses_moe), ...)
+    repeats: int
+
+
+def segments(cfg: ModelConfig) -> List[Segment]:
+    units = [
+        (kind, cfg.layer_uses_moe(i)) for i, kind in enumerate(cfg.blocks())
+    ]
+    segs: List[Segment] = []
+    P = len(cfg.layer_pattern)
+    i = 0
+    n = len(units)
+    while i < n:
+        if P > 1 and i + P <= n:
+            pat = tuple(units[i : i + P])
+            r = 1
+            while i + (r + 1) * P <= n and tuple(units[i + r * P : i + (r + 1) * P]) == pat:
+                r += 1
+            if all(pat == tuple(units[i : i + P]) for _ in range(1)):
+                segs.append(Segment(unit=pat, repeats=r))
+                i += r * P
+                continue
+        # maximal run of a single identical unit
+        u = units[i]
+        r = 1
+        while i + r < n and units[i + r] == u:
+            r += 1
+        segs.append(Segment(unit=(u,), repeats=r))
+        i += r
+    return segs
+
+
+# ---------------------------------------------------------------- block init
+def _nrm(key, shape, std, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def block_init(cfg: ModelConfig, kind: str, use_moe: bool, key) -> Params:
+    D, H, KV = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    std = 0.02
+    ks = iter(jax.random.split(key, 48))
+    p: Params = {"norm1": jnp.zeros((D,), jnp.bfloat16)}
+    if kind == "attn":
+        p.update(
+            wq=_nrm(next(ks), (D, H, hd), std),
+            wk=_nrm(next(ks), (D, KV, hd), std),
+            wv=_nrm(next(ks), (D, KV, hd), std),
+            wo=_nrm(next(ks), (H, hd, D), std / max(1, cfg.n_layers) ** 0.5),
+        )
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.zeros((hd,), jnp.bfloat16)
+            p["k_norm"] = jnp.zeros((hd,), jnp.bfloat16)
+    elif kind == "mla":
+        qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+        rd, nd, vd = cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
+        p.update(
+            wq_a=_nrm(next(ks), (D, qr), std),
+            q_norm=jnp.zeros((qr,), jnp.bfloat16),
+            wq_b=_nrm(next(ks), (qr, H, nd + rd), std),
+            wkv_a=_nrm(next(ks), (D, kvr + rd), std),
+            kv_norm=jnp.zeros((kvr,), jnp.bfloat16),
+            wkv_b=_nrm(next(ks), (kvr, H, nd + vd), std),
+            wo=_nrm(next(ks), (H, vd, D), std / max(1, cfg.n_layers) ** 0.5),
+        )
+    elif kind == "rglru":
+        W, K = cfg.lru_width, cfg.conv_width
+        p.update(
+            w_rec_in=_nrm(next(ks), (D, W), std),
+            w_gate_in=_nrm(next(ks), (D, W), std),
+            w_out=_nrm(next(ks), (W, D), std),
+            conv_w=_nrm(next(ks), (K, W), std),
+            a_gate=_nrm(next(ks), (W,), std, jnp.float32),
+            a_gate_bias=jnp.zeros((W,), jnp.float32),
+            i_gate=_nrm(next(ks), (W,), std, jnp.float32),
+            i_gate_bias=jnp.zeros((W,), jnp.float32),
+            **{"lambda": jax.random.uniform(next(ks), (W,), jnp.float32, 0.0, 1.0)},
+        )
+    elif kind == "rwkv":
+        hd_r = cfg.rwkv_head_dim
+        sl, dl = cfg.rwkv_shift_lora, cfg.rwkv_decay_lora
+        p.update(
+            norm2=jnp.zeros((D,), jnp.bfloat16),
+            mu_x=_nrm(next(ks), (D,), std, jnp.float32),
+            mu_rkvwg=_nrm(next(ks), (5, D), std, jnp.float32),
+            shift_w1=_nrm(next(ks), (D, 5 * sl), std),
+            shift_w2=_nrm(next(ks), (5, sl, D), std),
+            w_r=_nrm(next(ks), (D, D), std),
+            w_k=_nrm(next(ks), (D, D), std),
+            w_v=_nrm(next(ks), (D, D), std),
+            w_g=_nrm(next(ks), (D, D), std),
+            w_o=_nrm(next(ks), (D, D), std / max(1, cfg.n_layers) ** 0.5),
+            w0=_nrm(next(ks), (D,), std, jnp.float32),
+            decay_w1=_nrm(next(ks), (D, dl), std),
+            decay_w2=_nrm(next(ks), (dl, D), std),
+            u=_nrm(next(ks), (D,), std, jnp.float32),
+            ln_x_scale=jnp.ones((D,), jnp.float32),
+            ln_x_bias=jnp.zeros((D,), jnp.float32),
+            ffn_mu_k=_nrm(next(ks), (D,), std, jnp.float32),
+            ffn_mu_r=_nrm(next(ks), (D,), std, jnp.float32),
+            ffn_k=_nrm(next(ks), (D, cfg.d_ff), std),
+            ffn_v=_nrm(next(ks), (cfg.d_ff, D), std),
+            ffn_r=_nrm(next(ks), (D, D), std),
+        )
+        return p  # rwkv has no separate mlp
+    else:
+        raise ValueError(kind)
+
+    # paired MLP / MoE
+    p["norm2"] = jnp.zeros((D,), jnp.bfloat16)
+    if use_moe:
+        E, Fe = cfg.n_experts, cfg.expert_d_ff
+        p["moe"] = {
+            "router": _nrm(next(ks), (D, E), std, jnp.float32),
+            "w_gate": _nrm(next(ks), (E, D, Fe), std),
+            "w_up": _nrm(next(ks), (E, D, Fe), std),
+            "w_down": _nrm(next(ks), (E, Fe, D), std / max(1, cfg.n_layers) ** 0.5),
+        }
+        if cfg.n_shared_experts:
+            Fs = Fe * cfg.n_shared_experts
+            p["moe"].update(
+                shared_w_gate=_nrm(next(ks), (D, Fs), std),
+                shared_w_up=_nrm(next(ks), (D, Fs), std),
+                shared_w_down=_nrm(next(ks), (Fs, D), std),
+            )
+    else:
+        F = cfg.d_ff
+        if cfg.mlp_kind == "swiglu":
+            p["mlp"] = {
+                "w_gate": _nrm(next(ks), (D, F), std),
+                "w_up": _nrm(next(ks), (D, F), std),
+                "w_down": _nrm(next(ks), (F, D), std / max(1, cfg.n_layers) ** 0.5),
+            }
+        else:
+            p["mlp"] = {
+                "w_in": _nrm(next(ks), (D, F), std),
+                "w_out": _nrm(next(ks), (F, D), std / max(1, cfg.n_layers) ** 0.5),
+            }
+    return p
+
+
+_AXES_BY_NAME = {
+    "norm1": (None,), "norm2": (None,), "q_norm": (None,), "k_norm": (None,),
+    "kv_norm": (None,),
+    "wq": ("embed", "heads", None), "wk": ("embed", "kv_heads", None),
+    "wv": ("embed", "kv_heads", None), "wo": ("heads", None, "embed"),
+    "wq_a": ("embed", None), "wq_b": (None, "heads", None),
+    "wkv_a": ("embed", None), "wkv_b": (None, "heads", None),
+    "w_rec_in": ("embed", "lru"), "w_gate_in": ("embed", "lru"),
+    "w_out": ("lru", "embed"), "conv_w": (None, "lru"),
+    "a_gate": ("lru",), "a_gate_bias": ("lru",), "i_gate": ("lru",),
+    "i_gate_bias": ("lru",), "lambda": ("lru",),
+    "mu_x": (None,), "mu_rkvwg": (None, None),
+    "shift_w1": ("embed", None), "shift_w2": (None, None, None),
+    "w_r": ("embed", None), "w_k": ("embed", None), "w_v": ("embed", None),
+    "w_g": ("embed", None), "w_o": ("embed", None),
+    "w0": (None,), "decay_w1": ("embed", None), "decay_w2": (None, None),
+    "u": (None,), "ln_x_scale": (None,), "ln_x_bias": (None,),
+    "ffn_mu_k": (None,), "ffn_mu_r": (None,),
+    "ffn_k": ("embed", "mlp"), "ffn_v": ("mlp", "embed"), "ffn_r": ("embed", None),
+    "mlp": {
+        "w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"), "w_in": ("embed", "mlp"),
+        "w_out": ("mlp", "embed"),
+    },
+    "moe": {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", None), "w_up": ("experts", "embed", None),
+        "w_down": ("experts", None, "embed"),
+        "shared_w_gate": ("embed", "mlp"), "shared_w_up": ("embed", "mlp"),
+        "shared_w_down": ("mlp", "embed"),
+    },
+}
+
+
+def block_axes(p: Params, *, stacked: bool, moe_impl: str = "dispatch") -> Any:
+    """Logical axes pytree matching a block's params (optionally +stack dim)."""
+
+    def of(name_path, leaf):
+        table = _AXES_BY_NAME
+        for name in name_path[:-1]:
+            table = table[name]
+        axes = table[name_path[-1]]
+        if moe_impl == "ep" and name_path[0] == "moe" and axes[0] == "experts":
+            # EP: experts over the (data, model) mesh; the inner dim ZeRO-3
+            # shards over "pod" and is regathered inside the shard_map body
+            axes = ("experts_ep", "expert_fsdp") + (None,) * (len(axes) - 2)
+        return (("stack",) + tuple(axes)) if stacked else tuple(axes)
+
+    out = {}
+    for k, v in p.items():
+        if isinstance(v, dict):
+            out[k] = {k2: of((k, k2), v2) for k2, v2 in v.items()}
+        else:
+            out[k] = of((k,), v)
+    return out
+
+
+# --------------------------------------------------------------- block apply
+def block_apply(
+    cfg: ModelConfig,
+    kind: str,
+    use_moe: bool,
+    p: Params,
+    x: jnp.ndarray,
+    *,
+    mode: str,                      # train | prefill | decode
+    cache: Optional[Dict] = None,
+    pos: Any = 0,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache: Optional[Dict] = None
+    if kind == "attn":
+        w = window or cfg.attn_window
+        if mode == "train":
+            a = attn_lib.gqa_forward(cfg, p, h, window=w)
+        elif mode == "prefill":
+            a, new_cache = attn_lib.gqa_prefill(cfg, p, h, cache, window=w)
+        else:
+            a, new_cache = attn_lib.gqa_decode(cfg, p, h, cache, pos, window=w)
+        x = x + a
+    elif kind == "mla":
+        if mode == "train":
+            a = attn_lib.mla_forward(cfg, p, h)
+        elif mode == "prefill":
+            a, new_cache = attn_lib.mla_prefill(cfg, p, h, cache)
+        else:
+            a, new_cache = attn_lib.mla_decode(cfg, p, h, cache, pos)
+        x = x + a
+    elif kind == "rglru":
+        a, new_cache = rec_lib.rglru_block(cfg, p, h, cache)
+        x = x + a
+    elif kind == "rwkv":
+        # rwkv block manages both sublayers + its own norms
+        y, new_cache = rec_lib.rwkv_block(
+            cfg, {**p}, x, cache
+        )
+        return y, new_cache
+    else:
+        raise ValueError(kind)
+
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if use_moe:
+        moe_fn = (moe_ep_lib.moe_block_ep if cfg.moe_impl == "ep"
+                  else moe_lib.moe_block)
+        x = x + moe_fn(cfg, p["moe"], h2)
+    else:
+        mlp = mlp_swiglu if cfg.mlp_kind == "swiglu" else mlp_gelu
+        x = x + mlp(h2, p["mlp"])
+    return x, new_cache
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     *, window: int = 0) -> Dict:
+    if kind == "attn":
+        w = window or (cfg.attn_window if len(cfg.layer_pattern) > 1 else 0)
+        return attn_lib.gqa_init_cache(cfg, batch, max_len, window=w)
+    if kind == "mla":
+        return attn_lib.mla_init_cache(cfg, batch, max_len)
+    if kind == "rglru":
+        return rec_lib.rglru_init_state(cfg, batch)
+    if kind == "rwkv":
+        return rec_lib.rwkv_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------- the LM
+def init_params(cfg: ModelConfig, rng) -> Params:
+    D, V = cfg.d_model, cfg.padded_vocab
+    keys = jax.random.split(rng, 4 + len(segments(cfg)))
+    p: Params = {
+        "embed": _nrm(keys[0], (V, D), 0.02),
+        "final_norm": jnp.zeros((D,), jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _nrm(keys[1], (D, V), 0.02)
+    segs = segments(cfg)
+    p["segments"] = []
+    for si, seg in enumerate(segs):
+        seg_keys = jax.random.split(keys[3 + si], seg.repeats * len(seg.unit))
+        stacked = []
+        for j, (kind, use_moe) in enumerate(seg.unit):
+            per_rep = [
+                block_init(cfg, kind, use_moe, seg_keys[r * len(seg.unit) + j])
+                for r in range(seg.repeats)
+            ]
+            stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+        p["segments"].append(stacked)
+    if cfg.mtp:
+        p["mtp"] = {
+            "proj": _nrm(keys[2], (2 * D, D), 0.02),
+            "block": block_init(cfg, cfg.blocks()[-1], False, keys[2]),
+        }
+    return p
+
+
+def param_axes(cfg: ModelConfig, params: Params) -> Any:
+    axes: Dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": (None,),
+    }
+    if "lm_head" in params:
+        axes["lm_head"] = ("embed", "vocab")
+    axes["segments"] = [
+        [block_axes(sub, stacked=True, moe_impl=cfg.moe_impl) for sub in seg]
+        for seg in params["segments"]
+    ]
+    if "mtp" in params:
+        axes["mtp"] = {
+            "proj": ("embed", None),
+            "block": block_axes(params["mtp"]["block"], stacked=False,
+                                moe_impl=cfg.moe_impl),
+        }
+    return axes
+
+
+def _run_segments(cfg: ModelConfig, params: Params, x: jnp.ndarray, *,
+                  mode: str, caches=None, pos=0, remat: bool = True):
+    segs = segments(cfg)
+    new_caches = [] if caches is not None else None
+    for si, seg in enumerate(segs):
+        p_seg = params["segments"][si]
+        c_seg = caches[si] if caches is not None else None
+
+        def step(carry, xs, _seg=seg):
+            h = carry
+            layer_params = xs[0]
+            layer_caches = xs[1] if c_seg is not None else [None] * len(_seg.unit)
+            outs = []
+            for j, (kind, use_moe) in enumerate(_seg.unit):
+                h, nc = block_apply(
+                    cfg, kind, use_moe, layer_params[j], h,
+                    mode=mode, cache=layer_caches[j], pos=pos,
+                )
+                outs.append(nc if nc is not None else {})
+            return h, tuple(outs)
+
+        if remat and mode == "train":
+            # REPRO_REMAT_POLICY: full (default) saves only the layer carry;
+            # dots additionally saves matmul outputs (no dot recompute in
+            # bwd) — the compute<->memory knob of §Perf/qwen3.
+            policy = os.environ.get("REPRO_REMAT_POLICY", "full")
+            if policy == "dots":
+                body = jax.checkpoint(
+                    step,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                )
+            else:
+                body = jax.checkpoint(step)
+        else:
+            body = step
+        xs = (p_seg, c_seg) if c_seg is not None else (p_seg,)
+        x, seg_caches = jax.lax.scan(body, x, xs)
+        if new_caches is not None:
+            new_caches.append(list(seg_caches))
+    return x, new_caches
+
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jnp.ndarray):
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def lm_logits(cfg: ModelConfig, params: Params, x: jnp.ndarray):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                   *, inputs_embeds: Optional[jnp.ndarray] = None,
+                   remat: bool = True):
+    """Final hidden states (B, S, D) + aux (mtp hidden).  The train loss uses
+    this with a *chunked* head so (B, S, V) logits never materialize."""
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(cfg, params, tokens)
+    x, _ = _run_segments(cfg, params, x, mode="train", remat=remat)
+    aux = {}
+    if cfg.mtp and "mtp" in params:
+        # predict token t+2 from (h_t, emb(token_{t+1})) through one extra block
+        emb_next = embed_tokens(cfg, params, tokens)[:, 1:]
+        h_mtp = jnp.concatenate([x[:, :-1], emb_next], axis=-1)
+        h_mtp = jnp.einsum("bsd,dk->bsk", h_mtp, params["mtp"]["proj"])
+        kind = cfg.blocks()[-1]
+        h_mtp, _ = block_apply(cfg, kind, False, params["mtp"]["block"], h_mtp,
+                               mode="train")
+        aux["mtp_hidden"] = h_mtp
+    return x, aux
+
+
+def forward_train(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                  *, inputs_embeds: Optional[jnp.ndarray] = None,
+                  remat: bool = True):
+    """Teacher-forcing logits (B, S, V); tokens (B, S) int32."""
+    x, aux_h = forward_hidden(cfg, params, tokens,
+                              inputs_embeds=inputs_embeds, remat=remat)
+    logits = lm_logits(cfg, params, x)
+    aux = {}
+    if "mtp_hidden" in aux_h:
+        aux["mtp_logits"] = lm_logits(cfg, params, aux_h["mtp_hidden"])
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
+    caches = []
+    for seg in segments(cfg):
+        seg_caches = []
+        for (kind, _moe) in seg.unit:
+            one = block_cache_init(cfg, kind, batch, max_len)
+            seg_caches.append(
+                jax.tree.map(
+                    lambda x: jnp.zeros((seg.repeats,) + x.shape, x.dtype), one
+                )
+            )
+        caches.append(seg_caches)
+    return caches
+
+
+def cache_axes(cfg: ModelConfig, cache: list) -> Any:
+    """Logical axes for the decode cache: KV tensors shard over batch (+kv
+    heads where divisible); recurrent states shard over batch only."""
+    paths = jax.tree_util.tree_flatten_with_path(cache)[0]
+    treedef = jax.tree_util.tree_structure(cache)
+    leaves = []
+    for path, x in paths:
+        last = None
+        for p in path:
+            if hasattr(p, "key"):
+                last = str(p.key)
+        nd = x.ndim
+        if last in ("k", "v") and nd == 5:       # (stack, B, S, KV, hd)
+            axes = ("stack", "batch", "kv_seq", "kv_heads", None)
+        elif last == "ckv" and nd == 4:          # (stack, B, S, latent)
+            axes = ("stack", "batch", "kv_seq", None)
+        else:                                     # recurrent states
+            axes = tuple(["stack", "batch"] + [None] * (nd - 2))
+        leaves.append(axes[:nd])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            cache: list, *, inputs_embeds: Optional[jnp.ndarray] = None):
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(cfg, params, tokens)
+    x, new_caches = _run_segments(cfg, params, x, mode="prefill", caches=cache)
+    logits = lm_logits(cfg, params, x[:, -1:])
+    return logits, new_caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jnp.ndarray,
+                cache: list, pos):
+    """token (B, 1) int32; pos scalar int32 — current write position."""
+    x = embed_tokens(cfg, params, token)
+    x, new_caches = _run_segments(cfg, params, x, mode="decode", caches=cache,
+                                  pos=pos)
+    logits = lm_logits(cfg, params, x)
+    return logits, new_caches

@@ -1,0 +1,25 @@
+"""Versioned artifact store: content-addressed objects + delta chains,
+storage-graph optimization via the paper's solvers."""
+
+from .delta import (
+    RecreationCostModel,
+    apply_delta,
+    decode_full,
+    encode_delta,
+    encode_full,
+    flatten_payload,
+)
+from .objectstore import ObjectStore
+from .version_store import VersionMeta, VersionStore
+
+__all__ = [
+    "ObjectStore",
+    "VersionStore",
+    "VersionMeta",
+    "RecreationCostModel",
+    "flatten_payload",
+    "encode_full",
+    "decode_full",
+    "encode_delta",
+    "apply_delta",
+]

@@ -1,0 +1,70 @@
+"""Content-addressed object store (the physical layer under the version store).
+
+Blobs are zstd-compressed and stored under their sha256; writes are atomic
+(tmp + rename) so a preempted checkpoint save never corrupts the store —
+the object either exists fully or not at all.  Dedup falls out of content
+addressing: committing an identical shard twice stores one blob.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+from pathlib import Path
+from typing import Dict, Optional
+
+import zstandard
+
+
+class ObjectStore:
+    def __init__(self, root: str | Path, *, zstd_level: int = 3) -> None:
+        self.root = Path(root)
+        (self.root / "objects").mkdir(parents=True, exist_ok=True)
+        self._c = zstandard.ZstdCompressor(level=zstd_level)
+        self._d = zstandard.ZstdDecompressor()
+
+    def _path(self, key: str) -> Path:
+        return self.root / "objects" / f"{key[:2]}" / f"{key[2:]}.zst"
+
+    def put(self, payload: bytes) -> tuple[str, int]:
+        """Store a blob; returns (key, stored_bytes)."""
+        key = hashlib.sha256(payload).hexdigest()
+        path = self._path(key)
+        if path.exists():
+            return key, path.stat().st_size
+        path.parent.mkdir(parents=True, exist_ok=True)
+        compressed = self._c.compress(payload)
+        fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(compressed)
+            os.replace(tmp, path)  # atomic on POSIX
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return key, len(compressed)
+
+    def get(self, key: str) -> bytes:
+        return self._d.decompress(self._path(key).read_bytes())
+
+    def exists(self, key: str) -> bool:
+        return self._path(key).exists()
+
+    def stored_size(self, key: str) -> int:
+        return self._path(key).stat().st_size
+
+    def delete(self, key: str) -> None:
+        p = self._path(key)
+        if p.exists():
+            p.unlink()
+
+    def keys(self):
+        for sub in (self.root / "objects").iterdir():
+            if sub.is_dir():
+                for f in sub.iterdir():
+                    if f.suffix == ".zst":
+                        yield sub.name + f.stem
+
+    def total_bytes(self) -> int:
+        return sum(self._path(k).stat().st_size for k in self.keys())

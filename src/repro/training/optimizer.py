@@ -1,0 +1,115 @@
+"""Optimizer + LR schedules (pure JAX, no optax dependency).
+
+AdamW with bf16 params / f32 moments; schedules include **WSD**
+(warmup-stable-decay — MiniCPM's schedule, arXiv:2404.06395) next to cosine
+and constant.  All state is a plain pytree, so it versions/checkpoints
+through the store like everything else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    schedule: str = "cosine"          # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    stable_frac: float = 0.8          # WSD: fraction of post-warmup at peak
+    final_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def learning_rate(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, s / jnp.maximum(1.0, cfg.warmup_steps))
+    t = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        frac = cfg.final_lr_frac + (1 - cfg.final_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t)
+        )
+    elif cfg.schedule == "wsd":
+        # stable at peak for stable_frac, then exponential-style decay
+        decay_t = jnp.clip((t - cfg.stable_frac) / max(1e-6, 1 - cfg.stable_frac), 0, 1)
+        frac = jnp.where(
+            t < cfg.stable_frac,
+            1.0,
+            cfg.final_lr_frac ** decay_t,
+        )
+    else:
+        frac = jnp.asarray(1.0)
+    return cfg.peak_lr * warm * frac
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars (1-D leaves)."""
+    return True
+
+
+def adamw_update(
+    cfg: OptimizerConfig, params: Any, grads: Any, opt_state: Dict[str, Any]
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = opt_state["step"] + 1
+    lr = learning_rate(cfg, step)
+
+    # global-norm clip (f32)
+    gsq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * gf
+        nu = b2 * nu + (1 - b2) * gf * gf
+        update = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decay matrices only
+            update = update + cfg.weight_decay * pf
+        return (pf - lr * update).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+    params = jax.tree.unflatten(treedef, new_p)
+    new_state = {
+        "mu": jax.tree.unflatten(treedef, new_mu),
+        "nu": jax.tree.unflatten(treedef, new_nu),
+        "step": step,
+    }
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return params, new_state, metrics

@@ -1,0 +1,165 @@
+"""Train step factory: loss, remat, microbatching, gradient compression.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function ready for ``jax.jit`` with donated state.  Features:
+
+* causal-LM cross entropy in f32 (+ DeepSeek MTP auxiliary loss);
+* per-layer remat is inside the model (scan body checkpointing);
+* **microbatching**: grad accumulation over ``grad_accum`` slices via
+  ``lax.scan`` — global batch stays fixed while peak activation memory
+  drops by the accumulation factor;
+* optional **int8 gradient compression with error feedback** — the
+  distributed-optimization knob: quantize per-tensor-block, keep the
+  quantization residual host-side in state and re-inject next step
+  (error feedback keeps convergence; see distributed/compression.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.compression import compress_grads
+from ..models.registry import ModelBundle
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    grad_accum: int = 1
+    compress_grads: bool = False
+    mtp_weight: float = 0.3
+    z_loss: float = 1e-4
+
+
+def init_train_state(bundle: ModelBundle, rng) -> Dict[str, Any]:
+    params = bundle.init(rng)
+    return {
+        "params": params,
+        "opt": init_opt_state(params),
+        "error_fb": None,  # created lazily when compression is on
+    }
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  z_loss: float = 0.0) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0] - lse
+    loss = -ll.mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    return loss
+
+
+CE_CHUNK = 512
+
+
+def chunked_cross_entropy(head_fn, params, hidden: jnp.ndarray,
+                          targets: jnp.ndarray, z_loss: float = 0.0):
+    """CE over (B, S, D) hidden without materializing (B, S, V) logits.
+
+    Scans the sequence in CE_CHUNK slices; each chunk computes its logits,
+    loss contribution, and is rematerialized in the backward pass
+    (``jax.checkpoint`` on the body).  This is the difference between
+    ~150 GB and ~2 GB of temp at train_4k × 123k vocab.
+    """
+    B, S, D = hidden.shape
+    n = -(-S // CE_CHUNK)
+    pad = n * CE_CHUNK - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    hc = hidden.reshape(B, n, CE_CHUNK, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, CE_CHUNK).transpose(1, 0, 2)
+    valid_per_chunk = jnp.clip(
+        S - jnp.arange(n) * CE_CHUNK, 0, CE_CHUNK
+    )
+
+    @jax.checkpoint
+    def body(carry, inp):
+        h, t, nvalid = inp
+        lf = head_fn(params, h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        ll = jnp.take_along_axis(lf, t[..., None], axis=-1)[..., 0] - lse
+        mask = jnp.arange(CE_CHUNK)[None, :] < nvalid
+        loss_sum = -(ll * mask).sum()
+        z_sum = (jnp.square(lse) * mask).sum()
+        return (carry[0] + loss_sum, carry[1] + z_sum), None
+
+    (loss_sum, z_sum), _ = jax.lax.scan(
+        body, (0.0, 0.0), (hc, tc, valid_per_chunk)
+    )
+    denom = B * S
+    return loss_sum / denom + z_loss * z_sum / denom
+
+
+def make_loss_fn(bundle: ModelBundle, tcfg: TrainConfig):
+    cfg = bundle.cfg
+
+    def loss_fn(params, batch):
+        hidden, aux = bundle.train_hidden(params, batch)
+        tokens = batch["tokens"]
+        loss = chunked_cross_entropy(
+            bundle.head, params, hidden[:, :-1], tokens[:, 1:], tcfg.z_loss
+        )
+        if "mtp_hidden" in aux:
+            # mtp hidden[s] predicts token s+2 (built from h_s and emb_{s+1})
+            mtp = aux["mtp_hidden"]
+            loss = loss + tcfg.mtp_weight * chunked_cross_entropy(
+                bundle.head, params, mtp[:, :-1], tokens[:, 2:], 0.0
+            )
+        return loss
+
+    return loss_fn
+
+
+def make_train_step(
+    bundle: ModelBundle, tcfg: TrainConfig
+) -> Callable[[Dict, Dict], Tuple[Dict, Dict]]:
+    loss_fn = make_loss_fn(bundle, tcfg)
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        if tcfg.grad_accum > 1:
+            def slice_batch(b, i):
+                return jax.tree.map(
+                    lambda x: x.reshape((tcfg.grad_accum, -1) + x.shape[1:])[i], b
+                )
+
+            def accum(carry, i):
+                gsum, lsum = carry
+                mb = slice_batch(batch, i)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                accum, (g0, 0.0), jnp.arange(tcfg.grad_accum)
+            )
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, gsum)
+            loss = lsum / tcfg.grad_accum
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        error_fb = state.get("error_fb")
+        if tcfg.compress_grads:
+            if error_fb is None:
+                error_fb = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+            grads, error_fb = compress_grads(grads, error_fb)
+
+        params, opt, opt_metrics = adamw_update(
+            tcfg.optimizer, params, grads, state["opt"]
+        )
+        metrics = {"loss": loss, **opt_metrics}
+        return {"params": params, "opt": opt, "error_fb": error_fb}, metrics
+
+    return train_step

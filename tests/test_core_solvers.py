@@ -1,0 +1,326 @@
+"""Unit + property tests for the paper's core algorithms (§2-§4)."""
+
+import random
+
+import pytest
+
+from repro.core import (
+    InfeasibleError,
+    StorageSolution,
+    VersionGraph,
+    WorkloadSpec,
+    dc_like,
+    exact_min_storage,
+    generate,
+    git_heuristic,
+    last_tree,
+    lc_like,
+    local_move_greedy,
+    min_max_recreation_under_budget,
+    minimize_storage_sum_recreation,
+    minimum_storage_tree,
+    modified_prim,
+    shortest_path_tree,
+    zipf_weights,
+)
+from repro.core.solvers.spt import dijkstra
+
+
+# ----------------------------------------------------------- paper Figure 1
+def figure1_graph() -> VersionGraph:
+    g = VersionGraph(5, directed=True)
+    g.set_materialization(1, 10000, 10000)
+    g.set_materialization(2, 10100, 10100)
+    g.set_materialization(3, 9700, 9700)
+    g.set_materialization(4, 9800, 9800)
+    g.set_materialization(5, 10120, 10120)
+    g.set_delta(1, 2, 200, 350)
+    g.set_delta(1, 3, 1000, 3000)
+    g.set_delta(2, 4, 50, 200)
+    g.set_delta(3, 5, 800, 2500)
+    g.set_delta(2, 5, 200, 550)
+    g.set_delta(3, 2, 1100, 3200)
+    return g
+
+
+class TestPaperExample:
+    def test_mca_matches_figure1_iii(self):
+        """Figure 1(iii): all-delta chain, storage 11450."""
+        sol = minimum_storage_tree(figure1_graph())
+        sol.validate()
+        assert sol.storage_cost() == pytest.approx(11450)
+        assert sol.materialized() == [1]
+
+    def test_spt_matches_figure1_ii(self):
+        """Figure 1(ii): everything materialized, storage 49720."""
+        sol = shortest_path_tree(figure1_graph())
+        sol.validate()
+        assert sol.storage_cost() == pytest.approx(49720)
+        assert sol.materialized() == [1, 2, 3, 4, 5]
+        # paper: recreating V5 via the chain costs 13550 > direct 10120
+        assert sol.recreation_costs()[5] == pytest.approx(10120)
+
+    def test_v5_chain_recreation_cost(self):
+        """Paper Example 1: path V1->V3->V5 recreation = 13550."""
+        g = figure1_graph()
+        sol = StorageSolution(parent={1: 0, 2: 1, 3: 1, 4: 2, 5: 3}, graph=g)
+        sol.validate()
+        assert sol.recreation_costs()[5] == pytest.approx(10000 + 3000 + 2500)
+
+    def test_triangle_inequality_holds(self):
+        # figure numbers are fictitious; checker must at least run
+        g = figure1_graph()
+        g.check_triangle_inequality()
+
+
+# --------------------------------------------------------------- invariants
+def _workloads():
+    return [
+        generate(dc_like(100, seed=0)),
+        generate(lc_like(100, seed=1)),
+        generate(WorkloadSpec(commits=80, seed=2, phi_independent=True)),
+        generate(WorkloadSpec(commits=80, seed=3, directed=False)),
+    ]
+
+
+@pytest.fixture(scope="module", params=range(4), ids=["dc", "lc", "phi_ne", "undir"])
+def workload(request):
+    return _workloads()[request.param]
+
+
+class TestSolverInvariants:
+    def test_mca_minimal_vs_alternatives(self, workload):
+        g = workload.graph
+        mca = minimum_storage_tree(g)
+        mca.validate()
+        for other in (
+            shortest_path_tree(g),
+            last_tree(g, 2.0),
+            git_heuristic(g, window=20, max_depth=20),
+        ):
+            assert mca.storage_cost() <= other.storage_cost() + 1e-6
+
+    def test_spt_dominates_recreation(self, workload):
+        """SPT minimizes every R_i simultaneously (paper Problem 2 remark)."""
+        g = workload.graph
+        spt_rc = shortest_path_tree(g).recreation_costs()
+        for other in (
+            minimum_storage_tree(g),
+            last_tree(g, 2.0),
+            local_move_greedy(g, minimum_storage_tree(g).storage_cost() * 1.3),
+        ):
+            rc = other.recreation_costs()
+            for v in g.versions():
+                assert spt_rc[v] <= rc[v] + 1e-6
+
+    def test_lmg_budget_and_improvement(self, workload):
+        g = workload.graph
+        base = minimum_storage_tree(g)
+        for mult in (1.05, 1.2, 2.0):
+            budget = base.storage_cost() * mult
+            sol = local_move_greedy(g, budget)
+            sol.validate()
+            assert sol.storage_cost() <= budget + 1e-6
+            assert sol.sum_recreation() <= base.sum_recreation() + 1e-6
+
+    def test_lmg_monotone_in_budget(self, workload):
+        g = workload.graph
+        base = minimum_storage_tree(g)
+        sums = [
+            local_move_greedy(g, base.storage_cost() * m).sum_recreation()
+            for m in (1.0, 1.1, 1.5, 3.0)
+        ]
+        for a, b in zip(sums, sums[1:]):
+            assert b <= a + 1e-6
+
+    def test_mp_respects_theta(self, workload):
+        g = workload.graph
+        spt = shortest_path_tree(g)
+        for mult in (1.2, 2.0, 4.0):
+            theta = spt.max_recreation() * mult
+            sol = modified_prim(g, theta)
+            sol.validate()
+            assert sol.max_recreation() <= theta + 1e-6
+
+    def test_mp_infeasible_raises(self, workload):
+        g = workload.graph
+        spt = shortest_path_tree(g)
+        with pytest.raises(InfeasibleError):
+            modified_prim(g, spt.max_recreation() * 0.5)
+
+    def test_problem4_budget(self, workload):
+        g = workload.graph
+        base = minimum_storage_tree(g)
+        budget = base.storage_cost() * 1.5
+        sol = min_max_recreation_under_budget(g, budget)
+        sol.validate()
+        assert sol.storage_cost() <= budget + 1e-6
+        assert sol.max_recreation() <= base.max_recreation() + 1e-6
+
+    def test_problem5_constraint(self, workload):
+        g = workload.graph
+        base = minimum_storage_tree(g)
+        spt = shortest_path_tree(g)
+        theta = 0.5 * (base.sum_recreation() + spt.sum_recreation())
+        sol = minimize_storage_sum_recreation(g, theta)
+        sol.validate()
+        assert sol.sum_recreation() <= theta + 1e-6
+        assert sol.storage_cost() <= spt.storage_cost() + 1e-6
+
+    def test_gith_window_and_depth(self, workload):
+        g = workload.graph
+        sol = git_heuristic(g, window=10, max_depth=5)
+        sol.validate()
+        # GitH depth 0 == materialized == tree depth 1 (the root edge)
+        for v in g.versions():
+            assert sol.depth(v) - 1 <= 5
+
+    def test_workload_aware_lmg_not_worse(self, workload):
+        g = workload.graph
+        w = zipf_weights(g.n, seed=7)
+        base = minimum_storage_tree(g)
+        budget = base.storage_cost() * 1.3
+        aware = local_move_greedy(g, budget, weights=w)
+        oblivious = local_move_greedy(g, budget)
+        aware.validate()
+        assert aware.sum_recreation(w) <= oblivious.sum_recreation(w) + 1e-6
+
+
+class TestLASTGuarantees:
+    """Khuller et al. bounds hold for undirected Δ=Φ instances (paper §4.3)."""
+
+    @pytest.mark.parametrize("alpha", [1.5, 2.0, 3.0])
+    def test_bounds(self, alpha):
+        wl = generate(WorkloadSpec(commits=90, seed=11, directed=False))
+        g = wl.graph
+        mst = minimum_storage_tree(g)
+        sol = last_tree(g, alpha)
+        sol.validate()
+        dist, _ = dijkstra(g, weight="phi")
+        rc = sol.recreation_costs()
+        for v in g.versions():
+            assert rc[v] <= alpha * dist[v] + 1e-6
+        assert sol.storage_cost() <= (1 + 2 / (alpha - 1)) * mst.storage_cost() + 1e-6
+
+
+class TestExactSolver:
+    def _small(self, seed, n=8):
+        return generate(WorkloadSpec(commits=n, seed=seed, reveal_hops=4)).graph
+
+    def test_exact_beats_or_matches_mp(self):
+        for seed in range(4):
+            g = self._small(seed)
+            spt = shortest_path_tree(g)
+            theta = spt.max_recreation() * 1.5
+            mp = modified_prim(g, theta)
+            ex = exact_min_storage(g, theta_max=theta, time_budget_s=20)
+            assert ex.optimal
+            assert ex.solution.max_recreation() <= theta + 1e-6
+            assert ex.solution.storage_cost() <= mp.storage_cost() + 1e-6
+
+    def test_exact_matches_mca_when_unconstrained(self):
+        g = self._small(5)
+        mca = minimum_storage_tree(g)
+        loose = 10 * shortest_path_tree(g).max_recreation() * g.n
+        ex = exact_min_storage(g, theta_max=loose, time_budget_s=20)
+        assert ex.optimal
+        assert ex.solution.storage_cost() == pytest.approx(mca.storage_cost())
+
+    def test_exact_sum_variant(self):
+        g = self._small(6)
+        base = minimum_storage_tree(g)
+        spt = shortest_path_tree(g)
+        theta = 0.5 * (base.sum_recreation() + spt.sum_recreation())
+        ex = exact_min_storage(g, theta_sum=theta, time_budget_s=30)
+        assert ex.solution is not None
+        assert ex.solution.sum_recreation() <= theta + 1e-6
+        lmg = minimize_storage_sum_recreation(g, theta)
+        if ex.optimal:
+            assert ex.solution.storage_cost() <= lmg.storage_cost() + 1e-6
+
+
+# ----------------------------------------------------------------- hypothesis
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def random_graphs(draw):
+        n = draw(st.integers(min_value=2, max_value=14))
+        seed = draw(st.integers(min_value=0, max_value=2**31))
+        rng = random.Random(seed)
+        directed = draw(st.booleans())
+        g = VersionGraph(n, directed=directed)
+        for i in g.versions():
+            size = rng.uniform(100, 10000)
+            g.set_materialization(i, size, size * rng.uniform(0.5, 2.0))
+        # random subset of delta edges
+        for i in g.versions():
+            for j in g.versions():
+                if i >= j if not directed else i == j:
+                    continue
+                if rng.random() < 0.4:
+                    d = rng.uniform(1, 2000)
+                    g.set_delta(i, j, d, d * rng.uniform(0.5, 2.0))
+        return g
+
+    class TestProperties:
+        @settings(max_examples=40, deadline=None)
+        @given(random_graphs())
+        def test_solutions_are_spanning_trees(self, g):
+            """Lemma 1: every solver output is a spanning tree rooted at V0."""
+            for sol in (
+                minimum_storage_tree(g),
+                shortest_path_tree(g),
+                last_tree(g, 2.0),
+                git_heuristic(g, window=5, max_depth=8),
+            ):
+                sol.validate()  # checks parents exist + acyclicity
+                assert len(sol.parent) == g.n
+
+        @settings(max_examples=40, deadline=None)
+        @given(random_graphs())
+        def test_mst_lower_bounds_everything(self, g):
+            mst = minimum_storage_tree(g)
+            spt = shortest_path_tree(g)
+            assert mst.storage_cost() <= spt.storage_cost() + 1e-6
+            # SPT recreation lower-bounds MST's
+            s_rc, m_rc = spt.recreation_costs(), mst.recreation_costs()
+            for v in g.versions():
+                assert s_rc[v] <= m_rc[v] + 1e-6
+
+        @settings(max_examples=25, deadline=None)
+        @given(random_graphs(), st.floats(min_value=1.01, max_value=3.0))
+        def test_lmg_budget_never_violated(self, g, mult):
+            base = minimum_storage_tree(g)
+            sol = local_move_greedy(g, base.storage_cost() * mult)
+            assert sol.storage_cost() <= base.storage_cost() * mult + 1e-6
+            sol.validate()
+
+        @settings(max_examples=25, deadline=None)
+        @given(random_graphs(), st.floats(min_value=1.05, max_value=4.0))
+        def test_mp_theta_never_violated(self, g, mult):
+            spt = shortest_path_tree(g)
+            theta = spt.max_recreation() * mult
+            sol = modified_prim(g, theta)
+            sol.validate()
+            assert sol.max_recreation() <= theta + 1e-6
+
+        @settings(max_examples=10, deadline=None)
+        @given(random_graphs())
+        def test_exact_is_lower_bound(self, g):
+            if g.n > 9:
+                return  # keep exact tractable
+            spt = shortest_path_tree(g)
+            theta = spt.max_recreation() * 2
+            ex = exact_min_storage(g, theta_max=theta, time_budget_s=10)
+            if not ex.optimal:
+                return
+            mp = modified_prim(g, theta)
+            assert ex.solution.storage_cost() <= mp.storage_cost() + 1e-6

@@ -1,0 +1,36 @@
+"""Data pipeline determinism + resumability (the fault-tolerance contract)."""
+
+import numpy as np
+
+from repro.data.pipeline import PipelineState, SyntheticTokenPipeline
+
+
+class TestDeterminism:
+    def test_same_seed_same_stream(self):
+        a = SyntheticTokenPipeline(vocab=100, seq_len=16, global_batch=4, seed=7)
+        b = SyntheticTokenPipeline(vocab=100, seq_len=16, global_batch=4, seed=7)
+        for _ in range(3):
+            np.testing.assert_array_equal(a.next_batch()["tokens"],
+                                          b.next_batch()["tokens"])
+
+    def test_hosts_get_disjoint_shards(self):
+        h0 = SyntheticTokenPipeline(vocab=1000, seq_len=32, global_batch=8,
+                                    host_id=0, n_hosts=2, seed=0)
+        h1 = SyntheticTokenPipeline(vocab=1000, seq_len=32, global_batch=8,
+                                    host_id=1, n_hosts=2, seed=0)
+        b0, b1 = h0.next_batch()["tokens"], h1.next_batch()["tokens"]
+        assert b0.shape == (4, 32) and b1.shape == (4, 32)
+        assert not np.array_equal(b0, b1)
+
+    def test_snapshot_resume_exact(self):
+        p = SyntheticTokenPipeline(vocab=100, seq_len=16, global_batch=4, seed=1)
+        p.next_batch(); p.next_batch()
+        snap = p.snapshot()
+        want = p.next_batch()["tokens"]
+        q = SyntheticTokenPipeline(vocab=100, seq_len=16, global_batch=4, seed=1)
+        q.restore(snap)
+        np.testing.assert_array_equal(q.next_batch()["tokens"], want)
+
+    def test_state_roundtrip(self):
+        s = PipelineState(step=5, epoch=2)
+        assert PipelineState.from_dict(s.to_dict()) == s

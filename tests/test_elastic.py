@@ -1,0 +1,76 @@
+"""Elastic topology + straggler policy + end-to-end host-failure drill."""
+
+import numpy as np
+
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.training.elastic import HostTopology, StragglerPolicy
+
+
+class TestHostTopology:
+    def test_rebalance_after_failure(self):
+        topo = HostTopology(["h0", "h1", "h2", "h3"])
+        a = topo.rebalance(failed=["h2"], resume_step=100)
+        assert set(a) == {"h0", "h1", "h3"}
+        assert all(v.n_hosts == 3 and v.resume_step == 100 for v in a.values())
+        assert sorted(v.host_id for v in a.values()) == [0, 1, 2]
+
+    def test_join_after_replacement(self):
+        topo = HostTopology(["h0", "h1"])
+        a = topo.rebalance(joined=["h9"], resume_step=7)
+        assert set(a) == {"h0", "h1", "h9"}
+
+    def test_stream_is_exactly_the_smaller_jobs_stream(self):
+        """After dropping a host, survivors produce the same global stream a
+        fresh 3-host job would — the exactly-once contract."""
+        topo = HostTopology(["h0", "h1", "h2", "h3"])
+        assign = topo.rebalance(failed=["h3"], resume_step=5)
+
+        def batch_for(host, step):
+            a = assign[host]
+            p = SyntheticTokenPipeline(
+                vocab=100, seq_len=8, global_batch=6,
+                host_id=a.host_id, n_hosts=a.n_hosts, seed=0,
+            )
+            p.state.step = step
+            return p.next_batch()["tokens"]
+
+        fresh = [
+            SyntheticTokenPipeline(vocab=100, seq_len=8, global_batch=6,
+                                   host_id=i, n_hosts=3, seed=0)
+            for i in range(3)
+        ]
+        for f in fresh:
+            f.state.step = 5
+        for host, ref in zip(sorted(assign), fresh):
+            np.testing.assert_array_equal(
+                batch_for(host, 5), ref.next_batch()["tokens"]
+            )
+
+
+class TestStragglerPolicy:
+    def test_flags_persistent_straggler_only(self):
+        pol = StragglerPolicy(tolerance=2.0, patience=2)
+        for step in range(4):
+            for h in ("h0", "h1", "h2"):
+                pol.record(h, 1.0)
+            pol.record("slow", 5.0)
+            pol.update_strikes()
+        assert pol.stragglers() == ["slow"]
+        assert "h0" not in pol.stragglers()
+
+    def test_transient_blip_not_flagged(self):
+        pol = StragglerPolicy(tolerance=2.0, patience=3)
+        for h in ("h0", "h1", "h2"):
+            pol.record(h, 1.0)
+        pol.record("blip", 9.0)
+        pol.update_strikes()
+        for _ in range(3):
+            for h in ("h0", "h1", "h2", "blip"):
+                pol.record(h, 1.0)
+            pol.update_strikes()
+        assert pol.stragglers() == []
+
+    def test_no_deadline_with_single_host(self):
+        pol = StragglerPolicy()
+        pol.record("h0", 1.0)
+        assert pol.deadline_s() is None

@@ -1,0 +1,52 @@
+"""Loop-aware HLO roofline accounting — unit tests on synthetic HLO text."""
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+HLO = """
+HloModule test
+
+%cond.1 (p.0: (s32[], f32[8,8])) -> pred[] {
+  %p.0 = (s32[], f32[8,8]) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%p.0), index=0
+  %c.0 = s32[] constant(10)
+  ROOT %lt = pred[] compare(%gte.0, %c.0), direction=LT
+}
+
+%body.1 (p.1: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p.1 = (s32[], f32[8,8]) parameter(0)
+  %gte.1 = s32[] get-tuple-element(%p.1), index=0
+  %gte.2 = f32[8,8] get-tuple-element(%p.1), index=1
+  %dot.1 = f32[8,8]{1,0} dot(%gte.2, %gte.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c.1 = s32[] constant(1)
+  %add.1 = s32[] add(%gte.1, %c.1)
+  ROOT %t.1 = (s32[], f32[8,8]) tuple(%add.1, %dot.1)
+}
+
+ENTRY %main (a: f32[8,8], b: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %b = f32[8,8]{1,0} parameter(1)
+  %dot.0 = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c.2 = s32[] constant(0)
+  %t.0 = (s32[], f32[8,8]) tuple(%c.2, %dot.0)
+  %w.0 = (s32[], f32[8,8]) while(%t.0), condition=%cond.1, body=%body.1
+  %gte.3 = f32[8,8] get-tuple-element(%w.0), index=1
+  %ar.0 = f32[8,8]{1,0} all-reduce(%gte.3), replica_groups=[16,16]<=[256], to_apply=%body.1
+  ROOT %out = f32[8,8]{1,0} copy(%ar.0)
+}
+"""
+
+
+class TestAnalyzer:
+    def test_while_body_weighted_by_trip_count(self):
+        c = analyze_hlo(HLO)
+        # one 8x8x8 dot outside (1024 flops) + 10 trips inside
+        dot_flops = 2 * 8 * 8 * 8
+        assert c.flops >= 11 * dot_flops
+        assert c.flops < 11 * dot_flops + 2000  # small add-op slack
+
+    def test_collective_counted_once_with_bytes(self):
+        c = analyze_hlo(HLO)
+        assert c.coll.get("all-reduce") == 8 * 8 * 4
+
+    def test_empty_module(self):
+        assert analyze_hlo("").flops == 0

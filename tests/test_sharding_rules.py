@@ -1,0 +1,53 @@
+"""Logical-axis sharding rules: spec construction, fallbacks, degradation.
+
+Pure PartitionSpec logic — no devices needed (mesh built with AbstractMesh-
+style shape inspection via jax.sharding.Mesh over the single local device is
+not possible for 16x16, so we use jax.sharding.AbstractMesh).
+"""
+
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed.sharding import DEFAULT_RULES, spec_for
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+class TestSpecFor:
+    def test_weight_fsdp_tp(self):
+        spec = spec_for(("embed", "mlp"), (5120, 25600), mesh=MESH)
+        assert spec == P("data", "model")
+
+    def test_multi_axis_batch_on_multipod(self):
+        spec = spec_for(("batch", "seq"), (256, 4096), mesh=MESH3)
+        assert spec == P(("pod", "data"))  # trailing None trimmed
+
+    def test_kv_heads_too_small_replicates(self):
+        spec = spec_for(("embed", "kv_heads", None), (4608, 8, 128), mesh=MESH)
+        assert spec == P("data")  # kv=8 < 16 -> replicated, trailing None trimmed
+
+    def test_strict_divisibility_blocks_uneven(self):
+        # 36 heads on a 16-way axis: strict (jit args) replicates...
+        assert spec_for(("heads",), (36,), mesh=MESH, strict=True) == P()
+        # ...but activation constraints shard unevenly (GSPMD pads)
+        assert spec_for(("heads",), (36,), mesh=MESH, strict=False) == P("model")
+
+    def test_axis_tuple_degradation(self):
+        # experts=16 cannot take ("data","model")=256 ways; degrades to model
+        rules = dict(DEFAULT_RULES)
+        spec = spec_for(("experts_ep", None, None), (16, 4096, 6400),
+                        mesh=MESH, rules=rules)
+        assert spec == P("model")
+
+    def test_no_axis_reuse(self):
+        # two logical dims mapping to the same mesh axis: second one drops
+        spec = spec_for(("vocab", "mlp"), (1024, 1024), mesh=MESH)
+        assert spec == P("model", None) or spec == P("model")
+
+    def test_pod_only_rule(self):
+        spec = spec_for(("expert_fsdp",), (7168,), mesh=MESH3)
+        assert spec == P("pod")
+        # single-pod mesh: pod absent -> replicated
+        assert spec_for(("expert_fsdp",), (7168,), mesh=MESH) == P()

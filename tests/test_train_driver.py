@@ -1,0 +1,51 @@
+"""End-to-end train driver: loss decreases, preemption + resume is seamless,
+repack holds the restore SLA. (The examples demo this; the test pins it.)"""
+
+import numpy as np
+
+from repro.checkpoint import PreemptionGuard
+from repro.launch.train import RunConfig, train
+
+
+class PreemptAt(PreemptionGuard):
+    def __init__(self, at):
+        super().__init__()
+        self.at = at
+        self.count = 0
+
+    @property
+    def preempted(self):
+        self.count += 1
+        return self.count >= self.at
+
+
+def test_train_preempt_resume_repack(tmp_path):
+    common = dict(
+        arch="minicpm-2b", reduced=True, steps=16, seq_len=64,
+        global_batch=4, save_every=4, ckpt_dir=str(tmp_path),
+        max_restore_cost_s=30.0,
+    )
+    out1 = train(RunConfig(**common), guard=PreemptAt(at=8), log_every=100)
+    assert out1["preempted"]
+    assert 0 < out1["steps_done"] < 16
+
+    out2 = train(RunConfig(**common), log_every=100)
+    assert not out2["preempted"]
+    losses = out1["losses"] + out2["losses"]
+    assert len(losses) == 16  # no step repeated or skipped
+    assert losses[-1] < losses[0]
+
+    stats = out2["manager"].repack()
+    assert stats["after"]["max_recreation_s"] <= 30.0
+    out2["manager"].close()
+
+
+def test_train_grad_accum_and_compression_run(tmp_path):
+    out = train(RunConfig(
+        arch="minitron-4b", reduced=True, steps=4, seq_len=32,
+        global_batch=4, save_every=0, ckpt_dir=str(tmp_path),
+        grad_accum=2, compress_grads=True,
+    ), log_every=100)
+    assert out["steps_done"] == 4
+    assert np.isfinite(out["losses"]).all()
+    out["manager"].close()

@@ -1,0 +1,124 @@
+"""Training substrate: optimizer schedules, microbatching equivalence,
+gradient compression with error feedback, chunked CE."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.distributed.compression import compress_grads, quant_dequant
+from repro.models import get_model
+from repro.training.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    init_opt_state,
+    learning_rate,
+)
+from repro.training.train_loop import (
+    TrainConfig,
+    chunked_cross_entropy,
+    cross_entropy,
+    make_train_step,
+)
+
+
+class TestSchedules:
+    def test_warmup_then_peak(self):
+        cfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100,
+                              schedule="constant")
+        assert float(learning_rate(cfg, jnp.asarray(0))) < 1e-4 + 1e-9
+        assert float(learning_rate(cfg, jnp.asarray(10))) == pytest.approx(1e-3)
+
+    def test_cosine_decays_to_final_frac(self):
+        cfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=0, total_steps=100,
+                              schedule="cosine", final_lr_frac=0.1)
+        end = float(learning_rate(cfg, jnp.asarray(100)))
+        assert end == pytest.approx(1e-4, rel=1e-3)
+
+    def test_wsd_stable_then_decay(self):
+        """MiniCPM's WSD: flat at peak for stable_frac, then decays."""
+        cfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=10, total_steps=110,
+                              schedule="wsd", stable_frac=0.8, final_lr_frac=0.1)
+        mid = float(learning_rate(cfg, jnp.asarray(50)))
+        assert mid == pytest.approx(1e-3, rel=1e-4)  # stable region
+        end = float(learning_rate(cfg, jnp.asarray(110)))
+        assert end == pytest.approx(1e-4, rel=1e-2)  # decayed
+
+    def test_adamw_moves_params_and_clips(self):
+        cfg = OptimizerConfig(grad_clip=1.0, peak_lr=1e-2)
+        params = {"w": jnp.ones((4, 4), jnp.float32)}
+        grads = {"w": jnp.full((4, 4), 100.0, jnp.float32)}  # must clip
+        opt = init_opt_state(params)
+        new_p, new_opt, m = adamw_update(cfg, params, grads, opt)
+        assert float(m["grad_norm"]) == pytest.approx(400.0)
+        assert int(new_opt["step"]) == 1
+        assert not np.array_equal(np.asarray(new_p["w"], np.float32),
+                                  np.asarray(params["w"], np.float32))
+
+
+class TestMicrobatching:
+    def test_grad_accum_matches_full_batch(self):
+        cfg = ARCHS["minitron-4b"].reduced()
+        bundle = get_model(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (4, 32)), jnp.int32)}
+
+        def run(accum):
+            tcfg = TrainConfig(optimizer=OptimizerConfig(peak_lr=1e-3),
+                               grad_accum=accum)
+            step = jax.jit(make_train_step(bundle, tcfg))
+            state = {"params": params, "opt": init_opt_state(params),
+                     "error_fb": None}
+            new_state, metrics = step(state, batch)
+            return float(metrics["loss"]), new_state["params"]
+
+        l1, p1 = run(1)
+        l2, p2 = run(4)
+        assert l1 == pytest.approx(l2, rel=2e-2)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=5e-2, atol=5e-3)
+
+
+class TestChunkedCE:
+    def test_matches_unchunked(self):
+        rng = np.random.RandomState(1)
+        B, S, D, V = 2, 70, 16, 50  # S not divisible by the chunk => padding
+        hidden = jnp.asarray(rng.randn(B, S, D), jnp.float32)
+        head = jnp.asarray(rng.randn(D, V), jnp.float32)
+        targets = jnp.asarray(rng.randint(0, V, (B, S)), jnp.int32)
+        want = cross_entropy(jnp.einsum("bsd,dv->bsv", hidden, head), targets)
+        got = chunked_cross_entropy(
+            lambda p, h: jnp.einsum("bsd,dv->bsv", h, p), head, hidden, targets
+        )
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+class TestCompression:
+    def test_quant_dequant_bounded_error(self):
+        rng = np.random.RandomState(2)
+        x = jnp.asarray(rng.randn(1000) * 5, jnp.float32)
+        y = quant_dequant(x)
+        err = np.abs(np.asarray(y) - np.asarray(x)).max()
+        scale = np.abs(np.asarray(x)).max() / 127
+        assert err <= scale * 1.01
+
+    def test_error_feedback_preserves_sum(self):
+        """Over many steps, Σ compressed ≈ Σ raw (EF carries the residual)."""
+        rng = np.random.RandomState(3)
+        g_raw = [jnp.asarray(rng.randn(256) * 0.1, jnp.float32) for _ in range(50)]
+        e = {"g": jnp.zeros((256,), jnp.float32)}
+        total_c = np.zeros(256, np.float32)
+        total_r = np.zeros(256, np.float32)
+        for g in g_raw:
+            comp, e_new = compress_grads({"g": g}, e)
+            e = e_new
+            total_c += np.asarray(comp["g"])
+            total_r += np.asarray(g)
+        drift = np.abs(total_c + np.asarray(e["g"]) - total_r).max()
+        assert drift < 1e-3

@@ -1,0 +1,80 @@
+"""Recompute roofline memory terms with the Pallas flash-attention kernel
+substituted for the unfused XLA attention chain (EXPERIMENTS §Perf cell 3).
+
+The CPU harness cannot *measure* the kernel's effect (interpret mode
+re-expands the chain into the same HLO ops), so this derives the optimized
+term analytically and auditable-y:
+
+  memory'_s = memory_s − (unfused attention bytes)/BW + (flash bytes)/BW
+
+Unfused attention bytes per layer are estimated from the same traffic model
+hlo_analysis uses (score-chain ops × f32 score tensor size); flash bytes come
+from kernels.flash_attention.flash_hbm_bytes (Q+K+V+O + K/V per q-wave).
+
+Usage: python tools/flash_substitution.py [dryrun_results.jsonl]
+"""
+
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import ARCHS, SHAPES  # noqa: E402
+from repro.kernels.flash_attention import flash_hbm_bytes  # noqa: E402
+
+HBM_BW = 819e9
+# ops touching the f32 score tensor in the unfused online-softmax chain
+# (mask-select, max, sub, exp, sum, correction mul, pv-cast, carry r/w)
+SCORE_CHAIN_OPS = 8
+
+
+def unfused_attention_bytes(cfg, shape, chips: int, passes: int) -> float:
+    """Per-device f32 score-chain traffic for one step (all layers)."""
+    B, S = shape.global_batch, shape.seq_len
+    H = cfg.n_heads
+    attn_layers = sum(1 for k in cfg.blocks() if k in ("attn", "mla"))
+    # scores (B·H·S·S) f32 streamed SCORE_CHAIN_OPS times, sharded over chips
+    per_layer = B * H * S * S * 4.0 * SCORE_CHAIN_OPS / chips
+    return per_layer * attn_layers * passes
+
+
+def flash_bytes(cfg, shape, chips: int, passes: int) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    attn_layers = sum(1 for k in cfg.blocks() if k == "attn")
+    per_layer = flash_hbm_bytes(
+        B, S, S, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ) / chips
+    return per_layer * attn_layers * passes
+
+
+def main(path: str = "dryrun_results.jsonl") -> None:
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("skipped") or "error" in r:
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+
+    print(f"{'cell':44s} {'memory_s':>9s} {'attn_unfused':>12s} "
+          f"{'attn_flash':>10s} {'memory_s(flash)':>15s}")
+    for (arch, shape_name, mesh), r in sorted(recs.items()):
+        if mesh != "16x16" or shape_name != "prefill_32k":
+            continue
+        cfg = ARCHS[arch]
+        if cfg.q_lora_rank or cfg.is_encdec or not any(
+            k == "attn" for k in cfg.blocks()
+        ):
+            continue  # MLA / enc-dec / attention-free: kernel variant N/A
+        shape = SHAPES[shape_name]
+        chips = r["chips"]
+        mem_s = r["roofline"]["memory_s"]
+        passes = 1  # prefill: forward only
+        un = unfused_attention_bytes(cfg, shape, chips, passes)
+        fl = flash_bytes(cfg, shape, chips, passes)
+        new = max(0.0, mem_s - un / HBM_BW + fl / HBM_BW)
+        print(f"{arch+' × '+shape_name:44s} {mem_s:9.2f} {un/HBM_BW:12.2f} "
+              f"{fl/HBM_BW:10.3f} {new:15.2f}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl")

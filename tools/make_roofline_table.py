@@ -1,0 +1,57 @@
+"""Render EXPERIMENTS.md tables from dryrun_results.jsonl."""
+import json, sys
+
+recs = {}
+for l in open("dryrun_results.jsonl"):
+    r = json.loads(l)
+    recs[(r["arch"], r["shape"], r.get("mesh", "skip"))] = r
+
+def fmt_s(x):
+    if x is None: return "-"
+    if x >= 1: return f"{x:.2f}s"
+    if x >= 1e-3: return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+ARCH_ORDER = ["qwen3-32b","starcoder2-7b","minitron-4b","minicpm-2b",
+              "phi3.5-moe-42b-a6.6b","deepseek-v3-671b","seamless-m4t-medium",
+              "recurrentgemma-9b","chameleon-34b","rwkv6-3b"]
+SHAPE_ORDER = ["train_4k","prefill_32k","decode_32k","long_500k"]
+
+print("| arch | shape | compile | mem/dev (args+temp) | compute | memory | collective | bound | useful-FLOPs | MFU-UB |")
+print("|---|---|---|---|---|---|---|---|---|---|")
+for a in ARCH_ORDER:
+    for s in SHAPE_ORDER:
+        r = recs.get((a, s, "16x16"))
+        if r is None:
+            r2 = recs.get((a, s, "skip")) or next((v for (aa,ss,mm),v in recs.items() if aa==a and ss==s and v.get("skipped")), None)
+            if r2 and r2.get("skipped"):
+                print(f"| {a} | {s} | — | per-spec skip | | | | | | |")
+            continue
+        if "error" in r: 
+            print(f"| {a} | {s} | ERROR | | | | | | | |")
+            continue
+        m = r["memory"]; rf = r["roofline"]; mf = r["model_flops"]
+        gb = (m["args_bytes_per_dev"] + m["temp_bytes_per_dev"]) / 1e9
+        ufr = mf["useful_flops_ratio"]; mfu = mf["mfu_upper_bound"]
+        print(f"| {a} | {s} | {r['compile_s']:.0f}s | {gb:.1f} GB | "
+              f"{fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+              f"{rf['dominant']} | {ufr:.2f} | {mfu*100:.1f}% |" if ufr else
+              f"| {a} | {s} | {r['compile_s']:.0f}s | {gb:.1f} GB | - | - | - | - | - | - |")
+
+print()
+print("### Multi-pod (2×16×16 = 512 chips) — compile proof + memory")
+print()
+print("| arch | shape | compile | mem/dev | bound | collective Δ vs single-pod |")
+print("|---|---|---|---|---|---|")
+for a in ARCH_ORDER:
+    for s in SHAPE_ORDER:
+        r = recs.get((a, s, "2x16x16"))
+        r1 = recs.get((a, s, "16x16"))
+        if r is None or "error" in r: continue
+        m = r["memory"]; rf = r["roofline"]
+        gb = (m["args_bytes_per_dev"] + m["temp_bytes_per_dev"]) / 1e9
+        dc = ""
+        if r1 and "roofline" in r1:
+            c0, c1 = r1["roofline"]["collective_s"], rf["collective_s"]
+            dc = f"{(c1/c0-1)*100:+.0f}%" if c0 > 0 else "-"
+        print(f"| {a} | {s} | {r['compile_s']:.0f}s | {gb:.1f} GB | {rf['dominant']} | {dc} |")
