@@ -1,0 +1,145 @@
+"""Solver wall-clock scaling on array-native synthetic instances.
+
+Sweeps instance size n over 1k → 100k versions (the paper's §6 LF/DC scale),
+generating each instance with :func:`repro.core.generate_flat` — edges land
+directly in the flat ``EdgeArrays`` representation, no per-edge dict traffic
+— and times every heuristic end to end:
+
+* MCA (Problem 1), SPT (Problem 2), GitH;
+* LMG at budget 1.05 × C_min (Problem 3);
+* MP at θ = 1.5 × max SPT recreation (Problem 6).
+
+Results append to ``BENCH_solver_scale.json`` in the repo root: one entry
+per run carrying the whole (n → seconds) trajectory per solver, so repeated
+runs across PRs accumulate a history.  Also exposed as the ``solver_scale``
+suite of ``benchmarks.run`` (CSV rows, capped at 20k versions to keep the
+orchestrator fast).
+
+Run standalone:
+    PYTHONPATH=src python -m benchmarks.solver_scale [--ns 1000,5000,50000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+from repro.core import (
+    WorkloadSpec,
+    generate_flat,
+    local_move_greedy,
+    minimum_storage_tree,
+    modified_prim,
+    shortest_path_tree,
+)
+from repro.core.solvers.gith import git_heuristic
+
+from .common import Row
+
+DEFAULT_NS = (1_000, 5_000, 20_000, 50_000)
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_solver_scale.json"
+
+
+def _spec(n: int, seed: int = 0) -> WorkloadSpec:
+    """DC-like shape with a bounded reveal ball (edges ≈ 20–30 per version)."""
+    return WorkloadSpec(
+        commits=n, branch_interval=3, branch_prob=0.7, branch_limit=4,
+        branch_length=4, reveal_hops=3, seed=seed,
+    )
+
+
+def sweep(ns: Iterable[int], seed: int = 0) -> List[Dict]:
+    results: List[Dict] = []
+    for n in ns:
+        t0 = time.monotonic()
+        wl = generate_flat(_spec(n, seed=seed))
+        g = wl.graph
+        g.arrays()  # finalize the flat representation inside the gen timing
+        gen_s = time.monotonic() - t0
+        entry: Dict = {
+            "n": n,
+            "edges": g.n_edges,
+            "generate_s": round(gen_s, 4),
+            "solvers": {},
+        }
+
+        t0 = time.monotonic()
+        mst = minimum_storage_tree(g)
+        entry["solvers"]["mca"] = round(time.monotonic() - t0, 4)
+
+        t0 = time.monotonic()
+        spt = shortest_path_tree(g)
+        entry["solvers"]["spt"] = round(time.monotonic() - t0, 4)
+
+        t0 = time.monotonic()
+        git_heuristic(g, window=10, max_depth=50)
+        entry["solvers"]["gith"] = round(time.monotonic() - t0, 4)
+
+        budget = mst.storage_cost() * 1.05
+        t0 = time.monotonic()
+        lmg = local_move_greedy(g, budget, base=mst, spt=spt)
+        entry["solvers"]["lmg"] = round(time.monotonic() - t0, 4)
+        entry["lmg_budget_mult"] = 1.05
+        entry["lmg_sum_rec_vs_mst"] = round(
+            lmg.sum_recreation() / max(mst.sum_recreation(), 1e-12), 6
+        )
+
+        theta = spt.max_recreation() * 1.5
+        t0 = time.monotonic()
+        modified_prim(g, theta)
+        entry["solvers"]["mp"] = round(time.monotonic() - t0, 4)
+
+        results.append(entry)
+    return results
+
+
+def record(results: List[Dict], path: Path = BENCH_PATH) -> None:
+    history = []
+    if path.exists():
+        history = json.loads(path.read_text())
+    history.append(
+        {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"), "results": results}
+    )
+    path.write_text(json.dumps(history, indent=2) + "\n")
+
+
+def solver_scale(ns: Optional[Iterable[int]] = None) -> Iterable[Row]:
+    """``benchmarks.run`` suite adapter: CSV rows, 20k cap for CI speed."""
+    ns = tuple(ns) if ns is not None else tuple(
+        n for n in DEFAULT_NS if n <= 20_000
+    )
+    results = sweep(ns)
+    record(results)
+    for entry in results:
+        for solver, seconds in entry["solvers"].items():
+            yield Row(
+                name=f"solver_scale/{solver}/n{entry['n']}",
+                us_per_call=seconds * 1e6,
+                derived=f"edges={entry['edges']}",
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--ns", default=",".join(str(n) for n in DEFAULT_NS),
+        help="comma-separated instance sizes",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    try:
+        ns = [int(x) for x in args.ns.split(",") if x.strip()]
+    except ValueError:
+        ap.error(f"--ns must be comma-separated integers, got {args.ns!r}")
+    if not ns:
+        ap.error("--ns is empty: nothing to sweep")
+    results = sweep(ns, seed=args.seed)
+    record(results)
+    print(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -21,12 +21,14 @@ from .solvers.last import last_tree
 from .solvers.lmg import local_move_greedy, minimize_storage_sum_recreation
 from .solvers.mp import InfeasibleError, min_max_recreation_under_budget, modified_prim
 from .solvers.mst import minimum_storage_tree
-from .solvers.spt import dijkstra, shortest_path_tree
+from .solvers.spt import dijkstra, dijkstra_arrays, shortest_path_tree
+from .edge_arrays import EdgeArrays
 from .synthetic import (
     SyntheticWorkload,
     WorkloadSpec,
     dc_like,
     generate,
+    generate_flat,
     lc_like,
     zipf_weights,
 )
@@ -36,6 +38,9 @@ __all__ = [
     "VersionGraph",
     "StorageSolution",
     "EdgeCost",
+    "EdgeArrays",
+    "dijkstra_arrays",
+    "generate_flat",
     "minimum_storage_tree",
     "shortest_path_tree",
     "dijkstra",

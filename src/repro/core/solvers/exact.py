@@ -23,8 +23,10 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from ..version_graph import StorageSolution, VersionGraph
-from .spt import dijkstra
+from .spt import dijkstra_arrays
 
 
 @dataclasses.dataclass
@@ -48,22 +50,26 @@ def exact_min_storage(
 
     versions = list(g.versions())
     n = len(versions)
-    sp_phi, _ = dijkstra(g, weight="phi")
+    ea = g.arrays()
+    sp_phi, _ = dijkstra_arrays(ea, weight="phi")
 
-    # candidate parents per version, cheapest-Δ first
+    # candidate parents per version, cheapest-Δ first — one reverse-CSR slice
+    # per version instead of a per-edge Python scan
     cand: Dict[int, List[Tuple[float, float, int]]] = {}
     for v in versions:
-        opts = []
-        mc = g.materialization_cost(v)
-        if mc is not None:
-            opts.append((mc.delta, mc.phi, 0))
-        for u, c in g.in_edges(v):
-            if u == 0:
-                continue
-            # feasibility pre-prune for the max-recreation variant
-            if theta_max is not None and sp_phi.get(u, float("inf")) + c.phi > theta_max + 1e-9:
-                continue
-            opts.append((c.delta, c.phi, u))
+        eids = ea.in_edge_ids(v)
+        us = ea.src[eids]
+        ds = ea.delta[eids]
+        ps = ea.phi[eids]
+        keep = np.ones(us.shape[0], dtype=bool)
+        if theta_max is not None:
+            # feasibility pre-prune for the max-recreation variant: best-case
+            # recreation of the parent plus this edge must stay within θ
+            keep &= (us == 0) | (sp_phi[us] + ps <= theta_max + 1e-9)
+        opts = [
+            (float(ds[k]), float(ps[k]), int(us[k]))
+            for k in np.nonzero(keep)[0].tolist()
+        ]
         opts.sort()
         cand[v] = opts
     min_in = {v: (cand[v][0][0] if cand[v] else float("inf")) for v in versions}

@@ -11,15 +11,22 @@ As in the paper we also run it unchanged on directed instances, without the
 guarantees.  The DFS relaxes along tree edges in both traversal directions
 (the "back-edge" relaxation of the paper's Example 6); when a vertex exceeds
 its α·SP budget the entire shortest path from the root is spliced in.
+
+State (tentative distances, parents, SPT distances) lives in flat NumPy
+arrays indexed by vertex id; edge costs come from the graph's
+:class:`~repro.core.edge_arrays.EdgeArrays` via point lookups.  The tour is
+iterative, so deep MST chains never touch the recursion limit.
 """
 
 from __future__ import annotations
 
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from ..version_graph import StorageSolution, VersionGraph
 from .mst import minimum_storage_tree
-from .spt import dijkstra, shortest_path_tree
+from .spt import dijkstra_arrays
 
 
 def last_tree(
@@ -31,21 +38,23 @@ def last_tree(
     if alpha <= 1.0:
         raise ValueError("alpha must exceed 1")
     base = base or minimum_storage_tree(g)
-    sp_dist, sp_parent = dijkstra(g, weight="phi")
+    ea = g.arrays()
+    sp_dist, sp_parent = dijkstra_arrays(ea, weight="phi")
 
-    mst_children: Dict[int, List[int]] = {v: [] for v in g.vertices()}
+    mst_children: List[List[int]] = [[] for _ in range(g.n + 1)]
     for i, p in base.parent.items():
         mst_children[p].append(i)
 
-    parent: Dict[int, int] = dict(base.parent)
-    d: Dict[int, float] = {0: 0.0}
-    for v in g.versions():
-        d[v] = float("inf")
+    parent = np.zeros(g.n + 1, dtype=np.int64)
+    for i, p in base.parent.items():
+        parent[i] = p
+    d = np.full(g.n + 1, np.inf, dtype=np.float64)
+    d[0] = 0.0
 
     def edge_phi(u: int, v: int) -> float:
-        c = g.materialization_cost(v) if u == 0 else g.cost(u, v)
-        assert c is not None, (u, v)
-        return c.phi
+        e = ea.lookup(u, v)
+        assert e >= 0, (u, v)
+        return float(ea.phi[e])
 
     def relax(u: int, v: int) -> None:
         w = edge_phi(u, v)
@@ -57,7 +66,7 @@ def last_tree(
         # walk the SPT path root→v and relax every edge along it
         path = [v]
         while path[-1] != 0:
-            path.append(sp_parent[path[-1]])
+            path.append(int(sp_parent[path[-1]]))
         for u, x in zip(path[::-1], path[::-1][1:]):
             relax(u, x)
         # after splicing, d[v] == sp_dist[v]
@@ -73,7 +82,7 @@ def last_tree(
                 pu = stack[-1][0]
                 # returning edge child->parent: relax parent via child when
                 # the reverse edge exists (undirected instances)
-                if pu != 0 and (g.cost(u, pu) is not None):
+                if pu != 0 and ea.lookup(u, pu) >= 0:
                     relax(u, pu)
             continue
         v = child
@@ -82,5 +91,7 @@ def last_tree(
             splice_shortest_path(v)
         stack.append((v, iter(mst_children[v])))
 
-    sol = StorageSolution(parent={i: parent[i] for i in g.versions()}, graph=g)
+    sol = StorageSolution(
+        parent={i: int(parent[i]) for i in g.versions()}, graph=g
+    )
     return sol

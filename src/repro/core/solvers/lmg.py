@@ -9,19 +9,50 @@ greedily swaps in shortest-path-tree edges maximizing
 
     ρ = (reduction in Σ recreation cost) / (increase in storage cost)
 
-The paper's O(|V|²) refinement is implemented: subtree sizes (or subtree
-access-frequency mass for the workload-aware variant, §4.1 "Access
-Frequencies") are maintained incrementally so each candidate evaluates in
-O(1); applying a swap updates the affected subtree only.
+Vectorized implementation
+-------------------------
+Every round scores the whole candidate set ξ with masked array ops instead
+of a per-edge Python loop:
+
+* candidate edges live in flat ``(u, v, Δ, Φ)`` arrays sorted by ``(u, v)``;
+* the cycle test ("is ``u`` inside ``v``'s subtree?") is an Euler-tour
+  interval containment check — the current tree's preorder is kept as an
+  ``order`` array with per-vertex ``tin`` positions and subtree ``size``s,
+  so the whole candidate set is filtered with two compares;
+* applying a swap splices the moved subtree's contiguous preorder block to
+  just after its new parent (one ``concatenate`` + one scatter), shifts the
+  subtree's recreation costs with one fancy-indexed add, and walks only the
+  two ancestor chains to fix subtree masses/sizes.
+
+Ties in ρ resolve to the smallest ``(u, v)`` candidate (argmax returns the
+first maximum over the sorted candidate arrays), which matches a sequential
+strict-`>` scan in sorted order.  All traversals are iterative — no
+``sys.setrecursionlimit`` games on deep chains.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from ..version_graph import StorageSolution, VersionGraph
 from .mst import minimum_storage_tree
 from .spt import shortest_path_tree
+
+
+def _preorder(children: List[List[int]], n: int) -> np.ndarray:
+    """Iterative preorder over vertices 0..n visiting children ascending."""
+    order = np.empty(n + 1, dtype=np.int64)
+    stack = [0]
+    k = 0
+    while stack:
+        x = stack.pop()
+        order[k] = x
+        k += 1
+        stack.extend(reversed(children[x]))
+    assert k == n + 1, "storage tree does not span all versions"
+    return order
 
 
 def local_move_greedy(
@@ -40,107 +71,137 @@ def local_move_greedy(
     """
     base = base or minimum_storage_tree(g)
     spt = spt or shortest_path_tree(g)
-    parent = dict(base.parent)
-    tree = StorageSolution(parent=parent, graph=g)
+    ea = g.arrays()
+    n = g.n
 
-    w_total = tree.storage_cost()
+    parent = np.zeros(n + 1, dtype=np.int64)
+    for i, p in base.parent.items():
+        parent[i] = p
+    vs = np.arange(1, n + 1, dtype=np.int64)
+    eid = ea.lookup_many(parent[vs], vs)
+    assert (eid >= 0).all(), "base tree uses an unrevealed edge"
+    cur_delta = np.zeros(n + 1, dtype=np.float64)
+    cur_phi = np.zeros(n + 1, dtype=np.float64)
+    cur_delta[1:] = ea.delta[eid]
+    cur_phi[1:] = ea.phi[eid]
+
+    # sequential left-fold to match StorageSolution.storage_cost() exactly
+    w_total = 0.0
+    for x in cur_delta[1:].tolist():
+        w_total += x
     if w_total > budget + 1e-9:
         raise ValueError(
             f"budget {budget} below minimum storage {w_total}: infeasible"
         )
 
     # --- incremental state -------------------------------------------------
-    children: Dict[int, Set[int]] = {v: set() for v in g.vertices()}
-    for i, p in parent.items():
-        children[p].add(i)
-    d: Dict[int, float] = {0: 0.0}  # recreation cost in current tree
+    children: List[List[int]] = [[] for _ in range(n + 1)]
+    for i in range(1, n + 1):
+        children[parent[i]].append(i)
+    order = _preorder(children, n)
+    tin = np.empty(n + 1, dtype=np.int64)
+    tin[order] = np.arange(n + 1, dtype=np.int64)
 
-    def _init_d(u: int) -> None:
-        for v in children[u]:
-            d[v] = d[u] + tree.edge_cost(v).phi
-            _init_d(v)
+    # recreation cost d: preorder guarantees parents before children
+    d = np.zeros(n + 1, dtype=np.float64)
+    for x in order[1:].tolist():
+        d[x] = d[parent[x]] + cur_phi[x]
 
-    import sys
+    # subtree mass (count, or Σ weights workload-aware) and subtree size
+    own = np.ones(n + 1, dtype=np.float64)
+    own[0] = 0.0
+    if weights is not None:
+        for i in range(1, n + 1):
+            own[i] = weights.get(i, 0.0)
+    mass = own.copy()
+    size = np.ones(n + 1, dtype=np.int64)
+    for x in order[:0:-1].tolist():  # reverse preorder, root excluded
+        p = int(parent[x])
+        mass[p] += mass[x]
+        size[p] += size[x]
 
-    old_limit = sys.getrecursionlimit()
-    sys.setrecursionlimit(max(old_limit, g.n + 100))
-    try:
-        _init_d(0)
-        # subtree mass: count (unweighted) or Σ weights (workload-aware)
-        mass: Dict[int, float] = {}
+    # candidate pool ξ: SPT edges absent from the current tree, (u, v)-sorted
+    cu_l, cv_l = [], []
+    for v in range(1, n + 1):
+        if spt.parent[v] != parent[v]:
+            cu_l.append(spt.parent[v])
+            cv_l.append(v)
+    cu = np.asarray(cu_l, dtype=np.int64)
+    cv = np.asarray(cv_l, dtype=np.int64)
+    if cu.shape[0]:
+        perm = np.lexsort((cv, cu))
+        cu, cv = cu[perm], cv[perm]
+    ceid = ea.lookup_many(cu, cv)
+    assert (ceid >= 0).all() or ceid.shape[0] == 0
+    cand_delta = ea.delta[ceid] if ceid.shape[0] else np.empty(0)
+    cand_phi = ea.phi[ceid] if ceid.shape[0] else np.empty(0)
+    active = np.ones(cu.shape[0], dtype=bool)
 
-        def _init_mass(u: int) -> float:
-            m = (1.0 if weights is None else weights.get(u, 0.0)) if u != 0 else 0.0
-            for v in children[u]:
-                m += _init_mass(v)
-            mass[u] = m
-            return m
-
-        _init_mass(0)
-    finally:
-        sys.setrecursionlimit(old_limit)
-
-    def in_subtree(node: int, root_v: int) -> bool:
-        v = node
-        while v != 0:
-            if v == root_v:
-                return True
-            v = parent[v]
-        return False
-
-    # candidate pool ξ: SPT edges absent from the current tree
-    candidates: Set[Tuple[int, int]] = {
-        (spt.parent[v], v) for v in g.versions() if spt.parent[v] != parent[v]
-    }
-
-    while candidates:
-        best_rho, best_edge = 0.0, None
-        for (u, v) in candidates:
-            if parent[v] == u:
-                continue
-            c_new = g.materialization_cost(v) if u == 0 else g.cost(u, v)
-            assert c_new is not None
-            c_old = tree.edge_cost(v)
-            dw = c_new.delta - c_old.delta
-            if w_total + dw > budget + 1e-9:
-                continue  # would violate the storage budget
-            if u != 0 and in_subtree(u, v):
-                continue  # would create a cycle
-            dd = (d[u] + c_new.phi) - d[v]  # change in v's recreation cost
-            reduction = -dd * mass[v]
-            if reduction <= 0:
-                continue
-            rho = reduction / dw if dw > 0 else float("inf")
-            if rho > best_rho:
-                best_rho, best_edge = rho, (u, v, dw, dd)
-        if best_edge is None:
+    while active.any():
+        dw = cand_delta - cur_delta[cv]
+        ok = active & (w_total + dw <= budget + 1e-9)
+        dd = (d[cu] + cand_phi) - d[cv]
+        reduction = -dd * mass[cv]
+        ok &= reduction > 0
+        # cycle test: u inside subtree(v) ⇔ tin[v] ≤ tin[u] < tin[v]+size[v];
+        # the root is never excluded (tin[0] == 0 < tin[v] for any v ≥ 1)
+        ok &= ~((tin[cv] <= tin[cu]) & (tin[cu] < tin[cv] + size[cv]))
+        if not ok.any():
             break
-        u, v, dw, dd = best_edge
-        old_u = parent[v]
+        rho = np.full(cu.shape[0], -1.0, dtype=np.float64)
+        pos = ok & (dw > 0)
+        rho[pos] = reduction[pos] / dw[pos]
+        rho[ok & (dw <= 0)] = np.inf
+        i = int(np.argmax(rho))
+        if rho[i] <= 0.0:
+            break
+        u, v = int(cu[i]), int(cv[i])
+        dwi, ddi = float(dw[i]), float(dd[i])
+        old_u = int(parent[v])
         # rewire
-        children[old_u].discard(v)
-        children[u].add(v)
         parent[v] = u
-        w_total += dw
+        w_total += dwi
+        cur_delta[v] = cand_delta[i]
+        cur_phi[v] = cand_phi[i]
         # subtree mass moves from old ancestors to new ancestors
-        m = mass[v]
+        mv = float(mass[v])
         a = old_u
         while a != 0:
-            mass[a] -= m
-            a = parent[a]
+            mass[a] -= mv
+            a = int(parent[a])
         a = u
         while a != 0:
-            mass[a] += m
-            a = parent[a]
-        # recreation costs of v's subtree shift by dd
-        stack = [v]
-        while stack:
-            x = stack.pop()
-            d[x] += dd
-            stack.extend(children[x])
-        candidates.discard((u, v))
+            mass[a] += mv
+            a = int(parent[a])
+        # recreation costs of v's subtree shift by dd (contiguous in preorder)
+        pv = int(tin[v])
+        sz = int(size[v])
+        block = order[pv:pv + sz]
+        d[block] += ddi
+        # splice the subtree block to immediately after its new parent
+        tu = int(tin[u])
+        if tu < pv:
+            order = np.concatenate(
+                (order[:tu + 1], block, order[tu + 1:pv], order[pv + sz:])
+            )
+        else:  # u sits after the block (it cannot be inside it)
+            order = np.concatenate(
+                (order[:pv], order[pv + sz:tu + 1], block, order[tu + 1:])
+            )
+        tin[order] = np.arange(n + 1, dtype=np.int64)
+        a = old_u
+        while a != 0:
+            size[a] -= sz
+            a = int(parent[a])
+        a = u
+        while a != 0:
+            size[a] += sz
+            a = int(parent[a])
+        active[i] = False
 
-    return tree
+    return StorageSolution(
+        parent={i: int(parent[i]) for i in range(1, n + 1)}, graph=g
+    )
 
 
 def minimize_storage_sum_recreation(

@@ -11,12 +11,19 @@ Faithful details:
   lines 10–17);
 * neighbours outside the tree are relaxed only if the recreation cost through
   V_i stays within θ (lines 19–24).
+
+The frontier relaxation (the hot path) runs as one masked array op over the
+dequeued vertex's CSR out-row; the rare in-tree re-parenting keeps its
+sequential scan because each acceptance must consult the ancestor chain
+built so far.  State lives in flat ``l`` / ``d`` / ``p`` arrays.
 """
 
 from __future__ import annotations
 
 import heapq
 from typing import Dict, Optional
+
+import numpy as np
 
 from ..version_graph import StorageSolution, VersionGraph
 from .mst import minimum_storage_tree
@@ -27,49 +34,65 @@ class InfeasibleError(ValueError):
     pass
 
 
-def _is_ancestor(p: Dict[int, int], anc: int, node: int) -> bool:
+def _is_ancestor(p: np.ndarray, anc: int, node: int) -> bool:
     """True if ``anc`` lies on ``node``'s current parent chain."""
     x = node
     while x != 0:
         if x == anc:
             return True
-        x = p.get(x, 0)
+        px = int(p[x])
+        if px < 0:  # unset parent — chain ends
+            return False
+        x = px
     return False
 
 
 def modified_prim(g: VersionGraph, theta: float) -> StorageSolution:
     """Problem 6: min total storage subject to max_i R_i ≤ theta."""
-    INF = float("inf")
-    l: Dict[int, float] = {v: INF for v in g.vertices()}
-    d: Dict[int, float] = {v: INF for v in g.vertices()}
-    p: Dict[int, int] = {}
+    ea = g.arrays()
+    nv = g.n + 1
+    l = np.full(nv, np.inf, dtype=np.float64)
+    d = np.full(nv, np.inf, dtype=np.float64)
+    p = np.full(nv, -1, dtype=np.int64)
     l[0] = d[0] = 0.0
-    in_tree = set()
+    in_tree = np.zeros(nv, dtype=bool)
     pq = [(0.0, 0)]
-    counter = 0
     while pq:
         li, vi = heapq.heappop(pq)
-        if vi in in_tree or li > l[vi] + 1e-15:
+        if in_tree[vi] or li > l[vi] + 1e-15:
             continue  # stale entry
-        in_tree.add(vi)
-        for vj, c in g.out_edges(vi):
-            if vj in in_tree:
-                # relaxation of in-tree nodes (lines 10-17)
-                if c.phi + d[vi] <= d[vj] + 1e-15 and c.delta <= l[vj] - 1e-15:
+        in_tree[vi] = True
+        s, e = ea.out_range(vi)
+        if s == e:
+            continue
+        vs = ea.dst[s:e]
+        dts = ea.delta[s:e]
+        phs = ea.phi[s:e]
+        it = in_tree[vs]
+        if it.any():
+            # relaxation of in-tree nodes (lines 10-17): sequential, because
+            # each acceptance rewires the ancestor chain consulted next
+            dvi = float(d[vi])
+            for k in np.nonzero(it)[0].tolist():
+                vj = int(vs[k])
+                cphi = float(phs[k])
+                cdel = float(dts[k])
+                if cphi + dvi <= d[vj] + 1e-15 and cdel <= l[vj] - 1e-15:
                     if _is_ancestor(p, vj, vi):
                         continue  # re-parenting under a descendant would cycle
                     p[vj] = vi
-                    d[vj] = c.phi + d[vi]
-                    l[vj] = c.delta
-            else:
-                # standard frontier relaxation under the θ constraint
-                if c.phi + d[vi] <= theta + 1e-9 and c.delta < l[vj] - 1e-15:
-                    d[vj] = c.phi + d[vi]
-                    l[vj] = c.delta
-                    p[vj] = vi
-                    heapq.heappush(pq, (l[vj], vj))
-        counter += 1
-    missing = [i for i in g.versions() if i not in in_tree]
+                    d[vj] = cphi + dvi
+                    l[vj] = cdel
+        # standard frontier relaxation under the θ constraint — one masked op
+        imp = ~it & (phs + d[vi] <= theta + 1e-9) & (dts < l[vs] - 1e-15)
+        if imp.any():
+            vj = vs[imp]
+            d[vj] = phs[imp] + d[vi]
+            l[vj] = dts[imp]
+            p[vj] = vi
+            for lv, vv in zip(l[vj].tolist(), vj.tolist()):
+                heapq.heappush(pq, (lv, vv))
+    missing = [i for i in g.versions() if not in_tree[i]]
     if missing:
         # The greedy dequeue order (by storage) can strand a version even at a
         # feasible θ, because d() along the partially-built tree may overshoot
@@ -93,13 +116,15 @@ def modified_prim(g: VersionGraph, theta: float) -> StorageSolution:
             path.reverse()
             for u, x in zip(path, path[1:]):
                 c = g.materialization_cost(x) if u == 0 else g.cost(u, x)
-                cand = d[u] + c.phi
-                if x not in in_tree or cand < d[x] - 1e-15:
+                cand = float(d[u]) + c.phi
+                if not in_tree[x] or cand < d[x] - 1e-15:
                     p[x] = u
                     d[x] = cand
                     l[x] = c.delta
-                    in_tree.add(x)
-    sol = StorageSolution(parent={i: p[i] for i in g.versions()}, graph=g)
+                    in_tree[x] = True
+    sol = StorageSolution(
+        parent={i: int(p[i]) for i in g.versions()}, graph=g
+    )
     return sol
 
 

@@ -1,18 +1,26 @@
 """Minimum spanning structures (paper Problem 1, Lemma 2).
 
-* Undirected instances: Prim's algorithm (binary heap), O(E log V).
+* Undirected instances: Prim's algorithm — binary heap over vertices, with
+  each dequeued vertex's whole CSR out-row relaxed in one masked array op.
 * Directed instances: Edmonds' optimum branching / minimum-cost arborescence
-  (MCA), recursive cycle-contraction formulation, rooted at the dummy vertex.
+  (MCA), iterative cycle-contraction over flat edge arrays: the cheapest
+  in-edge per vertex is a single stable lexsort per contraction level, and
+  the contraction/expansion stack replaces the old recursive formulation
+  (no recursion-limit concerns, and per-level state is compact int/float
+  arrays instead of nested Python tuples).
 
 Weights are the ``Δ`` components (storage bytes).  Tests cross-check the MCA
-against ``networkx.minimum_spanning_arborescence``.
+against the dict-based seed implementation on random instances.
 """
 
 from __future__ import annotations
 
 import heapq
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
+from ..edge_arrays import EdgeArrays
 from ..version_graph import StorageSolution, VersionGraph
 
 
@@ -27,146 +35,177 @@ def minimum_storage_tree(g: VersionGraph) -> StorageSolution:
 
 # ------------------------------------------------------------------- Prim MST
 def _prim(g: VersionGraph) -> Dict[int, int]:
-    parent: Dict[int, int] = {}
-    best: Dict[int, float] = {0: 0.0}
-    in_tree = set()
+    ea = g.arrays()
+    nv = ea.n + 1
+    parent = np.full(nv, -1, dtype=np.int64)
+    best = np.full(nv, np.inf, dtype=np.float64)
+    in_tree = np.zeros(nv, dtype=bool)
+    best[0] = 0.0
     pq: List[Tuple[float, int, int]] = [(0.0, 0, 0)]  # (w, vertex, parent)
     while pq:
         w, u, p = heapq.heappop(pq)
-        if u in in_tree:
+        if in_tree[u]:
             continue
-        in_tree.add(u)
+        in_tree[u] = True
         if u != 0:
             parent[u] = p
-        for v, c in g.out_edges(u):
-            if v in in_tree:
-                continue
-            if v not in best or c.delta < best[v]:
-                best[v] = c.delta
-                heapq.heappush(pq, (c.delta, v, u))
-    missing = [i for i in g.versions() if i not in parent]
+        s, e = ea.out_range(u)
+        if s == e:
+            continue
+        vs = ea.dst[s:e]
+        ws = ea.delta[s:e]
+        imp = ~in_tree[vs] & (ws < best[vs])
+        if imp.any():
+            vi = vs[imp]
+            wi = ws[imp]
+            best[vi] = wi
+            for wv, vv in zip(wi.tolist(), vi.tolist()):
+                heapq.heappush(pq, (wv, vv, u))
+    missing = [i for i in g.versions() if parent[i] < 0]
     if missing:
         raise ValueError(f"graph disconnected; unreachable: {missing[:8]}")
-    return parent
+    return {i: int(parent[i]) for i in g.versions()}
 
 
-# --------------------------------------------------- Edmonds (recursive form)
+# ----------------------------------------- Edmonds (incremental contraction)
 def _edmonds_mca(g: VersionGraph) -> Dict[int, int]:
-    edges = [(u, v, c.delta) for u, v, c in g.edges()]
-    nodes = list(g.vertices())
-    parent_edges = _edmonds(nodes, edges, root=0)
-    parent = {v: u for (u, v) in parent_edges}
+    eids = _edmonds_arrays(g.arrays(), root=0)
+    ea = g.arrays()
+    parent = {int(ea.dst[e]): int(ea.src[e]) for e in eids}
     missing = [i for i in g.versions() if i not in parent]
     if missing:
         raise ValueError(f"no arborescence: unreachable {missing[:8]}")
     return parent
 
 
-def _edmonds(
-    nodes: List[int], edges: List[Tuple[int, int, float]], root: int
-) -> List[Tuple[int, int]]:
-    """Return the edge set ``{(u, v)}`` of the min-cost arborescence.
+def _edmonds_arrays(ea: EdgeArrays, root: int = 0) -> np.ndarray:
+    """Edge ids (into ``ea``) of the min-cost arborescence rooted at ``root``.
 
-    Classic recursive contraction.  Each recursion level works with edge
-    tuples ``(u, v, w, payload)`` whose endpoints are *that level's* vertex
-    ids; ``payload`` is the corresponding edge tuple of the level below
-    (``None`` marks an original edge), so expansion unwinds level by level —
-    this handles arbitrarily nested cycle contractions.
+    Incremental cycle contraction: instead of rebuilding the whole edge list
+    per level (O(E) per contraction — quadratic on graphs with many
+    two-cycles), each contraction merges only the cycle members' in-edge
+    lists.  Components are tracked in a union-find; reduced edge weights are
+    applied in place to the members' in-edges; supernode in-edge selection
+    filters self-loops lazily with a vectorized representative gather.
+    Cheapest-in-edge ties break to the lowest edge id — the first edge in
+    ``(src, dst)`` order — matching a sequential strict-`<` scan, so results
+    are bit-identical to the recursive seed formulation.
+
+    The expansion phase walks the contraction forest: each frame re-routes
+    its supernode's chosen entering edge to the member it actually points
+    at, then adopts the remaining members' cycle edges.
     """
-    work = [(u, v, w, None) for (u, v, w) in edges if v != root and u != v]
-    chosen = _edmonds_rec(set(nodes), work, root)
-    out = []
-    for e in chosen:
-        while e[3] is not None:  # unwind to the original edge
-            e = e[3]
-        out.append((e[0], e[1]))
-    return out
+    keep = (ea.dst != root) & (ea.src != ea.dst)
+    eids = np.nonzero(keep)[0].astype(np.int64)
+    u = ea.src[eids]
+    v = ea.dst[eids]
+    w_cur = ea.delta[eids].astype(np.float64).copy()
 
+    n_base = ea.n + 1                       # vertex ids 0..n
+    cap = 2 * n_base + 2                    # ≤ one supernode per contraction
+    dsu = np.arange(cap, dtype=np.int64)
 
-def _edmonds_rec(nodes, edges, root):
-    """Return the chosen subset of ``edges`` (tuples of this level)."""
-    # 1. cheapest incoming edge per node
-    min_in: Dict[int, tuple] = {}
-    for e in edges:
-        u, v, w, _ = e
-        if v == root:
-            continue
-        cur = min_in.get(v)
-        if cur is None or w < cur[2]:
-            min_in[v] = e
-    for v in nodes:
-        if v != root and v not in min_in:
-            raise ValueError(f"vertex {v} unreachable from root")
+    def find(x: int) -> int:
+        while dsu[x] != x:
+            dsu[x] = dsu[dsu[x]]
+            x = int(dsu[x])
+        return x
 
-    # 2. detect a cycle among chosen edges
-    cycle = _find_cycle(nodes, min_in, root)
-    if cycle is None:
-        return list(min_in.values())
-
-    # 3. contract the cycle into a supernode
-    cyc_set = set(cycle)
-    super_node = max(nodes) + 1
-    new_nodes = {n for n in nodes if n not in cyc_set} | {super_node}
-    cyc_cost = {v: min_in[v][2] for v in cycle}
-    new_edges = []
-    for e in edges:
-        u, v, w, _ = e
-        iu, iv = u in cyc_set, v in cyc_set
-        if iu and iv:
-            continue
-        if iv:
-            # reduced cost: picking this edge un-picks the cycle edge into v
-            new_edges.append((u, super_node, w - cyc_cost[v], e))
-        elif iu:
-            new_edges.append((super_node, v, w, e))
-        else:
-            new_edges.append((u, v, w, e))
-
-    # Drop this level's edge list before recursing: the expansion step only
-    # needs min_in and the cycle — without this, dense graphs with deeply
-    # nested contractions hold O(E·levels) tuples live (observed OOM on the
-    # 800-version DC runtime benchmark).
-    edges = None  # noqa: F841
-    sub = _edmonds_rec(new_nodes, new_edges, root)
-
-    # 4. expand: map chosen contracted edges back to this level's edges; the
-    # unique chosen edge entering the supernode tells us which cycle edge to
-    # drop.
-    result = []
-    enter_head = None
-    for e in sub:
-        u, v, w, payload = e
-        this_level = payload  # every new_edge wrapped one of this level's edges
-        result.append(this_level)
-        if v == super_node:
-            assert enter_head is None, "two edges entering one supernode"
-            enter_head = this_level[1]  # entry vertex inside the cycle
-    assert enter_head is not None, "no edge entered the contracted cycle"
-    for v in cycle:
-        if v != enter_head:
-            result.append(min_in[v])
-    return result
-
-
-def _find_cycle(nodes, min_in, root):
-    color: Dict[int, int] = {}
-    for start in nodes:
-        if start == root or color.get(start) == 2:
-            continue
-        path = []
-        v = start
+    def reps_of(nodes: np.ndarray) -> np.ndarray:
+        """Vectorized representative lookup (gather to fixpoint)."""
+        t = dsu[nodes]
         while True:
-            if v == root or color.get(v) == 2:
-                break
-            if color.get(v) == 1:
-                # found a cycle: extract it from path
-                idx = path.index(v)
+            t2 = dsu[t]
+            if (t2 == t).all():
+                return t
+            t = t2
+
+    # per-group in-edge lists (filtered edge ids), grouped via reverse sort
+    order = np.argsort(v, kind="stable")
+    ptr = np.searchsorted(v[order], np.arange(n_base + 1, dtype=np.int64))
+    in_list: Dict[int, List[np.ndarray]] = {}
+    for x in range(n_base):
+        if x != root:
+            in_list[x] = [order[ptr[x]:ptr[x + 1]]]
+
+    def choose_min(gr: int) -> int:
+        """Min-(w, id) in-edge of group ``gr``; compacts out self-loops."""
+        arrs = in_list[gr]
+        cat = arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
+        if cat.size:
+            good = reps_of(u[cat]) != gr
+            cat = cat[good]
+        if cat.size == 0:
+            raise ValueError(f"vertex {gr} unreachable from root")
+        in_list[gr] = [cat]
+        ws = w_cur[cat]
+        wmin = ws.min()
+        # min (w, id): lowest edge id among the exact-min weights
+        return int(cat[ws == wmin].min())
+
+    min_edge: Dict[int, int] = {}
+    for x in range(n_base):
+        if x != root:
+            min_edge[x] = choose_min(x)
+
+    forest_parent: Dict[int, int] = {}
+    frames: List[Tuple[int, List[int], Dict[int, int]]] = []
+    next_node = n_base
+
+    # cycle hunt over the min-in functional graph, ascending starts; each
+    # contraction resumes the walk from the fresh supernode
+    color = np.zeros(cap, dtype=np.int8)  # 0=white 1=on path 2=done
+    starts: List[int] = [x for x in range(n_base) if x != root]
+    si = 0
+    while si < len(starts):
+        start = starts[si]
+        si += 1
+        if find(start) != start or color[start] == 2:
+            continue
+        path: List[int] = []
+        x = start
+        while True:
+            if x == root or color[x] == 2:
                 for p in path:
                     color[p] = 2
-                return path[idx:]
-            color[v] = 1
-            path.append(v)
-            v = min_in[v][0]
-        for p in path:
-            color[p] = 2
-    return None
+                break
+            if color[x] == 1:
+                ci = path.index(x)
+                members = path[ci:]
+                path = path[:ci]
+                s = next_node
+                next_node += 1
+                frames.append((s, members, {m: min_edge[m] for m in members}))
+                merged: List[np.ndarray] = []
+                for m in members:
+                    cost_m = float(w_cur[min_edge[m]])
+                    for arr in in_list[m]:
+                        w_cur[arr] -= cost_m
+                        merged.append(arr)
+                    del in_list[m]
+                    del min_edge[m]
+                    forest_parent[m] = s
+                    dsu[m] = s
+                in_list[s] = merged
+                min_edge[s] = choose_min(s)
+                x = s  # resume the walk from the contracted node
+                continue
+            color[x] = 1
+            path.append(x)
+            x = find(int(u[min_edge[x]]))
+
+    # -------------------------------------------------------------- expansion
+    # entry_edge: group -> chosen in-edge; start from the surviving groups
+    entry_edge: Dict[int, int] = dict(min_edge)
+    for s, members, min_map in reversed(frames):
+        e = entry_edge.pop(s)
+        # the member the entering edge actually points at: ancestor of the
+        # edge head whose contraction parent is s
+        x = int(v[e])
+        while forest_parent.get(x) != s:
+            x = forest_parent[x]
+        entry_edge[x] = e
+        for m in members:
+            if m != x:
+                entry_edge[m] = min_map[m]
+    return eids[np.asarray(sorted(entry_edge.values()), dtype=np.int64)]

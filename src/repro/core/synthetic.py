@@ -31,6 +31,8 @@ import dataclasses
 import random
 from typing import Dict, List, Optional, Set, Tuple
 
+import numpy as np
+
 from .version_graph import VersionGraph
 
 
@@ -81,11 +83,8 @@ class SyntheticWorkload:
     blocks: Optional[Dict[int, Dict[int, float]]] = None
 
 
-def generate(spec: WorkloadSpec) -> SyntheticWorkload:
-    rng = random.Random(spec.seed)
-
-    # ---------------------------------------------------------------- step 1
-    # version DAG: trunk + branches (+ occasional merges)
+def _build_dag(spec: WorkloadSpec, rng: random.Random) -> Dict[int, List[int]]:
+    """Step 1: the version DAG — trunk + branches (+ occasional merges)."""
     parents: Dict[int, List[int]] = {1: []}
     trunk = [1]
     open_branches: List[List[int]] = []
@@ -122,7 +121,13 @@ def generate(spec: WorkloadSpec) -> SyntheticWorkload:
             next_id += 1
             parents[m] = [trunk[-1], branch[-1]]
             trunk.append(m)
+    return parents
 
+
+def generate(spec: WorkloadSpec) -> SyntheticWorkload:
+    rng = random.Random(spec.seed)
+
+    parents = _build_dag(spec, rng)
     n = len(parents)
 
     # ---------------------------------------------------------------- step 2
@@ -210,6 +215,116 @@ def generate(spec: WorkloadSpec) -> SyntheticWorkload:
 
     dag = {v: list(ps) for v, ps in parents.items()}
     return SyntheticWorkload(graph=g, version_dag=dag, sizes=sizes, blocks=blocks)
+
+
+def generate_flat(spec: WorkloadSpec) -> SyntheticWorkload:
+    """Array-native workload generator for 50k–100k-version instances.
+
+    Same two-step shape as :func:`generate` — identical version-DAG builder,
+    then Δ/Φ revealed within a ``reveal_hops`` ball — but the content model
+    is scalar instead of per-block: each commit carries an *added* and a
+    *deleted* byte volume relative to its first parent, and a delta between
+    two versions accumulates those volumes along the DAG path between them
+    (down-steps contribute the child's additions, up-steps the departed
+    version's deletions).  That keeps the path-metric structure (undirected
+    deltas satisfy the §3 triangle inequalities by construction) while
+    skipping the per-version block dictionaries that make :func:`generate`
+    infeasible beyond a few thousand commits.
+
+    Edges are bulk-loaded straight into the flat
+    :class:`~repro.core.edge_arrays.EdgeArrays` representation — no per-edge
+    Python dict traffic — so ``benchmarks/solver_scale.py`` can sweep
+    100k-version graphs.  ``blocks`` is ``None`` in the returned workload.
+    """
+    rng = random.Random(spec.seed)
+    parents = _build_dag(spec, rng)
+    n = len(parents)
+
+    # scalar content model: per-commit added/deleted volumes and full sizes
+    nrng = np.random.default_rng(spec.seed)
+    base_size = spec.init_blocks * spec.block_size_mean
+    n_edit = max(1, int(spec.init_blocks * spec.edit_rate))
+    n_grow = max(0, int(spec.init_blocks * spec.grow_rate))
+    noise = spec.block_size_mean / 4
+    # modify = delete + re-add (both sides of the diff); growth adds only
+    mod_vol = np.maximum(
+        64.0, nrng.normal(spec.block_size_mean, noise, size=n + 1)
+    ) * n_edit
+    grow_vol = np.maximum(
+        64.0, nrng.normal(spec.block_size_mean, noise, size=n + 1)
+    ) * n_grow
+    added = np.zeros(n + 1)
+    deleted = np.zeros(n + 1)
+    sizes_arr = np.zeros(n + 1)
+    sizes_arr[1] = base_size
+    for v in range(2, n + 1):
+        p0 = parents[v][0]
+        added[v] = mod_vol[v] + grow_vol[v]
+        deleted[v] = mod_vol[v]
+        sizes_arr[v] = sizes_arr[p0] + grow_vol[v]
+
+    def phi_of(delta: np.ndarray) -> np.ndarray:
+        if spec.phi_independent:
+            lo, hi = spec.compute_factor_range
+            return delta * nrng.uniform(lo, hi, size=delta.shape)
+        return delta * spec.io_factor
+
+    g = VersionGraph(n, directed=spec.directed)
+    vs = np.arange(1, n + 1, dtype=np.int64)
+    g.add_edges_bulk(
+        np.zeros(n, dtype=np.int64), vs, sizes_arr[1:], phi_of(sizes_arr[1:])
+    )
+
+    # BFS within reveal_hops over the *undirected* version DAG, carrying the
+    # (fwd, bwd) accumulated volumes per reached vertex
+    adj: Dict[int, List[Tuple[int, float, float]]] = {v: [] for v in parents}
+    for v, ps in parents.items():
+        for p in ps:
+            # step p→v descends to v ; step v→p ascends out of v
+            adj[p].append((v, float(added[v]), float(deleted[v])))
+            adj[v].append((p, float(deleted[v]), float(added[v])))
+
+    e_src: List[int] = []
+    e_dst: List[int] = []
+    e_fwd: List[float] = []
+    e_bwd: List[float] = []
+    for src in range(1, n + 1):
+        seen = {src}
+        frontier: List[Tuple[int, float, float]] = [(src, 0.0, 0.0)]
+        for _ in range(spec.reveal_hops):
+            nxt: List[Tuple[int, float, float]] = []
+            for x, fwd, bwd in frontier:
+                for y, step_fwd, step_bwd in adj[x]:
+                    if y in seen:
+                        continue
+                    seen.add(y)
+                    nxt.append((y, fwd + step_fwd, bwd + step_bwd))
+            if not nxt:
+                break
+            for y, fwd, bwd in nxt:
+                if spec.directed or src < y:  # undirected pairs revealed once
+                    e_src.append(src)
+                    e_dst.append(y)
+                    e_fwd.append(fwd)
+                    e_bwd.append(bwd)
+            frontier = nxt
+
+    src_a = np.asarray(e_src, dtype=np.int64)
+    dst_a = np.asarray(e_dst, dtype=np.int64)
+    fwd_a = np.asarray(e_fwd, dtype=np.float64)
+    bwd_a = np.asarray(e_bwd, dtype=np.float64)
+    if spec.directed:
+        d_fwd = fwd_a + spec.edit_overhead
+        d_bwd = bwd_a + spec.edit_overhead
+        g.add_edges_bulk(src_a, dst_a, d_fwd, phi_of(d_fwd))
+        g.add_edges_bulk(dst_a, src_a, d_bwd, phi_of(d_bwd))
+    else:
+        d_sym = fwd_a + bwd_a + spec.edit_overhead
+        g.add_edges_bulk(src_a, dst_a, d_sym, phi_of(d_sym), mirror=True)
+
+    dag = {v: list(ps) for v, ps in parents.items()}
+    sizes = {v: float(sizes_arr[v]) for v in range(1, n + 1)}
+    return SyntheticWorkload(graph=g, version_dag=dag, sizes=sizes, blocks=None)
 
 
 def zipf_weights(n: int, exponent: float = 2.0, seed: int = 0) -> Dict[int, float]:

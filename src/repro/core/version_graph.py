@@ -11,13 +11,27 @@ source ``V_0`` (index 0).  Edges carry ``(delta, phi)`` pairs:
 The matrices are *sparse*: entries never revealed (paper's "—") are simply
 absent.  ``directed=False`` means every revealed off-diagonal entry is usable
 in both directions (symmetric deltas, paper Scenario 1).
+
+Representation
+--------------
+``VersionGraph`` is a thin facade over :class:`~repro.core.edge_arrays.EdgeArrays`:
+mutations (``set_delta`` / ``set_materialization`` / ``add_edges_bulk``)
+append to builder buffers; the first query finalizes them into flat
+``src``/``dst``/``delta``/``phi`` arrays with CSR offsets (cached until the
+next mutation).  Per-edge accessors (``cost``, ``out_edges``...) are kept for
+compatibility and small-graph code; the vectorized solvers work on
+``arrays()`` directly.  Re-setting an existing ``(i, j)`` pair overwrites it,
+exactly like the old dict-of-dicts adjacency.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import random
 from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from .edge_arrays import EdgeArrays
 
 Edge = Tuple[int, int]
 
@@ -38,15 +52,16 @@ class VersionGraph:
             raise ValueError("need at least one version")
         self.n = n_versions
         self.directed = directed
-        # adjacency: src -> {dst: EdgeCost}; vertex ids 0..n (0 = dummy root)
-        self._adj: List[Dict[int, EdgeCost]] = [dict() for _ in range(n_versions + 1)]
-        self._radj: List[Dict[int, EdgeCost]] = [dict() for _ in range(n_versions + 1)]
+        # builder buffers: scalar appends + bulk numpy chunks
+        self._pend: List[Tuple[int, int, float, float]] = []
+        self._chunks: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
+        self._ea: Optional[EdgeArrays] = None
 
     # ------------------------------------------------------------------ build
     def set_materialization(self, i: int, delta: float, phi: float) -> None:
         """Record ``Δ_ii``/``Φ_ii`` (edge from the dummy root)."""
         self._check_version(i)
-        self._put(0, i, EdgeCost(float(delta), float(phi)))
+        self._put(0, i, float(delta), float(phi))
 
     def set_delta(self, i: int, j: int, delta: float, phi: float) -> None:
         """Record ``Δ_ij``/``Φ_ij`` — recreate ``V_j`` from ``V_i``."""
@@ -54,39 +69,119 @@ class VersionGraph:
         self._check_version(j)
         if i == j:
             raise ValueError("use set_materialization for the diagonal")
-        self._put(i, j, EdgeCost(float(delta), float(phi)))
+        self._put(i, j, float(delta), float(phi))
         if not self.directed:
-            self._put(j, i, EdgeCost(float(delta), float(phi)))
+            self._put(j, i, float(delta), float(phi))
 
-    def _put(self, i: int, j: int, c: EdgeCost) -> None:
-        self._adj[i][j] = c
-        self._radj[j][i] = c
+    def add_edges_bulk(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        delta: np.ndarray,
+        phi: np.ndarray,
+        *,
+        mirror: bool = False,
+    ) -> None:
+        """Append a whole batch of edges without per-edge Python overhead.
+
+        ``src == 0`` rows are materializations.  With ``mirror=True`` every
+        off-root edge is also added reversed (undirected instances).  Ids are
+        range-checked vectorized; the ``i == j`` diagonal is rejected like
+        ``set_delta``.
+        """
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        delta = np.asarray(delta, dtype=np.float64)
+        phi = np.asarray(phi, dtype=np.float64)
+        if not (src.shape == dst.shape == delta.shape == phi.shape):
+            raise ValueError("bulk edge arrays must share one shape")
+        if src.size == 0:
+            return
+        if (src < 0).any() or (src > self.n).any():
+            raise ValueError("bulk src ids out of range")
+        if (dst < 1).any() or (dst > self.n).any():
+            raise ValueError(f"bulk dst ids out of range 1..{self.n}")
+        if (src == dst).any():
+            raise ValueError("use set_materialization for the diagonal")
+        self._chunks.append((src, dst, delta, phi))
+        if mirror:
+            off = src != 0
+            if off.any():
+                self._chunks.append(
+                    (dst[off], src[off], delta[off], phi[off])
+                )
+        self._ea = None
+
+    def _put(self, i: int, j: int, delta: float, phi: float) -> None:
+        self._pend.append((i, j, delta, phi))
+        self._ea = None
 
     def _check_version(self, i: int) -> None:
         if not 1 <= i <= self.n:
             raise ValueError(f"version id {i} out of range 1..{self.n}")
 
+    # ----------------------------------------------------------------- arrays
+    def arrays(self) -> EdgeArrays:
+        """The flat array-native view; built lazily, cached until mutation."""
+        if self._ea is None:
+            parts = list(self._chunks)
+            if self._pend:
+                p = np.asarray(self._pend, dtype=np.float64).reshape(-1, 4)
+                parts.append(
+                    (
+                        p[:, 0].astype(np.int64),
+                        p[:, 1].astype(np.int64),
+                        p[:, 2],
+                        p[:, 3],
+                    )
+                )
+            if parts:
+                src = np.concatenate([c[0] for c in parts])
+                dst = np.concatenate([c[1] for c in parts])
+                delta = np.concatenate([c[2] for c in parts])
+                phi = np.concatenate([c[3] for c in parts])
+            else:
+                src = np.empty(0, dtype=np.int64)
+                dst = np.empty(0, dtype=np.int64)
+                delta = np.empty(0, dtype=np.float64)
+                phi = np.empty(0, dtype=np.float64)
+            self._ea = EdgeArrays.from_edges(self.n, src, dst, delta, phi)
+        return self._ea
+
     # ------------------------------------------------------------------ query
     def cost(self, i: int, j: int) -> Optional[EdgeCost]:
-        return self._adj[i].get(j)
+        ea = self.arrays()
+        e = ea.lookup(i, j)
+        if e < 0:
+            return None
+        return EdgeCost(float(ea.delta[e]), float(ea.phi[e]))
 
     def materialization_cost(self, i: int) -> Optional[EdgeCost]:
-        return self._adj[0].get(i)
+        return self.cost(0, i)
 
     def out_edges(self, i: int) -> Iterator[Tuple[int, EdgeCost]]:
-        return iter(self._adj[i].items())
+        ea = self.arrays()
+        s, e = ea.out_range(i)
+        for k in range(s, e):
+            yield int(ea.dst[k]), EdgeCost(float(ea.delta[k]), float(ea.phi[k]))
 
     def in_edges(self, j: int) -> Iterator[Tuple[int, EdgeCost]]:
-        return iter(self._radj[j].items())
+        ea = self.arrays()
+        for k in ea.in_edge_ids(j):
+            yield int(ea.src[k]), EdgeCost(float(ea.delta[k]), float(ea.phi[k]))
 
     def edges(self) -> Iterator[Tuple[int, int, EdgeCost]]:
-        for i, nbrs in enumerate(self._adj):
-            for j, c in nbrs.items():
-                yield i, j, c
+        ea = self.arrays()
+        for k in range(ea.m):
+            yield (
+                int(ea.src[k]),
+                int(ea.dst[k]),
+                EdgeCost(float(ea.delta[k]), float(ea.phi[k])),
+            )
 
     @property
     def n_edges(self) -> int:
-        return sum(len(nbrs) for nbrs in self._adj)
+        return self.arrays().m
 
     def vertices(self) -> range:
         """All vertex ids including the dummy root 0."""
@@ -96,7 +191,9 @@ class VersionGraph:
         return range(1, self.n + 1)
 
     def has_all_materializations(self) -> bool:
-        return all(i in self._adj[0] for i in self.versions())
+        ea = self.arrays()
+        s, e = ea.out_range(0)
+        return e - s == self.n  # root row is deduped and dst-unique
 
     # -------------------------------------------------------------- validation
     def check_triangle_inequality(self, *, tol: float = 1e-9) -> List[str]:
@@ -104,7 +201,9 @@ class VersionGraph:
         entries (only meaningful for symmetric Δ=Φ instances).  Returns a list
         of human-readable violations (empty = consistent)."""
         bad: List[str] = []
-        diag = {i: c.delta for i, c in self._adj[0].items()}
+        ea = self.arrays()
+        s0, e0 = ea.out_range(0)
+        diag = {int(ea.dst[k]): float(ea.delta[k]) for k in range(s0, e0)}
         for p, q, cpq in self.edges():
             if p == 0:
                 continue
@@ -179,20 +278,44 @@ class StorageSolution:
         assert c is not None
         return c
 
+    def _edge_ids(self) -> np.ndarray:
+        ea = self.graph.arrays()
+        n = self.graph.n
+        pa = np.zeros(n + 1, dtype=np.int64)
+        for i, p in self.parent.items():
+            pa[i] = p
+        vs = np.arange(1, n + 1, dtype=np.int64)
+        eid = ea.lookup_many(pa[vs], vs)
+        assert (eid >= 0).all(), "solution edge not revealed in graph"
+        return eid
+
     def storage_cost(self) -> float:
         """Total storage C = Σ Δ over edges of the storage tree."""
-        return sum(self.edge_cost(i).delta for i in self.graph.versions())
+        ea = self.graph.arrays()
+        # sequential left-fold, matching a per-edge Python summation exactly
+        total = 0.0
+        for x in ea.delta[self._edge_ids()].tolist():
+            total += x
+        return total
 
     def recreation_costs(self) -> Dict[int, float]:
-        """R_i for every version — Φ summed along the path from the root."""
+        """R_i for every version — Φ summed along the path from the root.
+
+        Iterative (explicit chain walk with memoization) so deep delta chains
+        never hit the interpreter recursion limit.
+        """
         memo: Dict[int, float] = {0: 0.0}
-
-        def rec(i: int) -> float:
-            if i not in memo:
-                memo[i] = rec(self.parent[i]) + self.edge_cost(i).phi
-            return memo[i]
-
-        return {i: rec(i) for i in self.graph.versions()}
+        for i in self.graph.versions():
+            chain: List[int] = []
+            v = i
+            while v not in memo:
+                chain.append(v)
+                v = self.parent[v]
+            r = memo[v]
+            for x in reversed(chain):
+                r = r + self.edge_cost(x).phi
+                memo[x] = r
+        return {i: memo[i] for i in self.graph.versions()}
 
     def sum_recreation(self, weights: Optional[Dict[int, float]] = None) -> float:
         rc = self.recreation_costs()

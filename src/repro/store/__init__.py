@@ -9,10 +9,11 @@ from .delta import (
     encode_full,
     flatten_payload,
 )
-from .objectstore import ObjectStore
+from .objectstore import Codec, ObjectStore
 from .version_store import VersionMeta, VersionStore
 
 __all__ = [
+    "Codec",
     "ObjectStore",
     "VersionStore",
     "VersionMeta",

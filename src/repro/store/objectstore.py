@@ -1,9 +1,17 @@
 """Content-addressed object store (the physical layer under the version store).
 
-Blobs are zstd-compressed and stored under their sha256; writes are atomic
-(tmp + rename) so a preempted checkpoint save never corrupts the store —
-the object either exists fully or not at all.  Dedup falls out of content
-addressing: committing an identical shard twice stores one blob.
+Blobs are compressed through one :class:`Codec` and stored under their
+sha256; writes are atomic (tmp + rename) so a preempted checkpoint save never
+corrupts the store — the object either exists fully or not at all.  Dedup
+falls out of content addressing: committing an identical shard twice stores
+one blob.
+
+``zstandard`` is an *optional* dependency: when it is absent the codec falls
+back to stdlib ``zlib`` transparently.  Decompression dispatches on the frame
+magic, so a store written with zstd stays readable as long as ``zstandard``
+is installed, and zlib-written stores are readable everywhere.  (The on-disk
+``.zst`` suffix is kept for layout stability regardless of backend — blob
+contents are self-describing.)
 """
 
 from __future__ import annotations
@@ -11,18 +19,73 @@ from __future__ import annotations
 import hashlib
 import os
 import tempfile
+import zlib
 from pathlib import Path
 from typing import Dict, Optional
 
-import zstandard
+try:  # optional dependency — stdlib zlib fallback below
+    import zstandard
+except ImportError:  # pragma: no cover - exercised via Codec(backend="zlib")
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+class Codec:
+    """The one compression codec every store byte goes through.
+
+    All compression in the store layer — object payloads *and* the Δ
+    measurements of ``VersionStore.build_cost_graph`` — routes through this
+    class, so measured storage costs always equal bytes actually at rest.
+    """
+
+    def __init__(self, level: int = 3, *, backend: Optional[str] = None) -> None:
+        if backend is None:
+            backend = "zstd" if zstandard is not None else "zlib"
+        if backend == "zstd" and zstandard is None:
+            raise RuntimeError("zstandard requested but not installed")
+        if backend not in ("zstd", "zlib"):
+            raise ValueError(f"unknown codec backend {backend!r}")
+        self.backend = backend
+        self.level = level
+        if backend == "zstd":
+            self._c = zstandard.ZstdCompressor(level=level)
+            self._d = zstandard.ZstdDecompressor()
+
+    def compress(self, payload: bytes) -> bytes:
+        if self.backend == "zstd":
+            return self._c.compress(payload)
+        # zstd levels reach 22; zlib tops out at 9
+        return zlib.compress(payload, min(self.level, 9))
+
+    def decompress(self, blob: bytes) -> bytes:
+        # dispatch on frame magic so mixed-backend stores keep working
+        if blob[:4] == _ZSTD_MAGIC:
+            if zstandard is None:
+                raise RuntimeError(
+                    "blob was written with zstd but zstandard is not installed"
+                )
+            if self.backend == "zstd":
+                return self._d.decompress(blob)
+            return zstandard.ZstdDecompressor().decompress(blob)
+        return zlib.decompress(blob)
+
+    def compressed_size(self, payload: bytes) -> int:
+        """Bytes this payload would occupy at rest (the measured Δ)."""
+        return len(self.compress(payload))
 
 
 class ObjectStore:
-    def __init__(self, root: str | Path, *, zstd_level: int = 3) -> None:
+    def __init__(
+        self,
+        root: str | Path,
+        *,
+        zstd_level: int = 3,
+        codec: Optional[Codec] = None,
+    ) -> None:
         self.root = Path(root)
         (self.root / "objects").mkdir(parents=True, exist_ok=True)
-        self._c = zstandard.ZstdCompressor(level=zstd_level)
-        self._d = zstandard.ZstdDecompressor()
+        self.codec = codec or Codec(level=zstd_level)
 
     def _path(self, key: str) -> Path:
         return self.root / "objects" / f"{key[:2]}" / f"{key[2:]}.zst"
@@ -34,7 +97,7 @@ class ObjectStore:
         if path.exists():
             return key, path.stat().st_size
         path.parent.mkdir(parents=True, exist_ok=True)
-        compressed = self._c.compress(payload)
+        compressed = self.codec.compress(payload)
         fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
@@ -46,7 +109,7 @@ class ObjectStore:
         return key, len(compressed)
 
     def get(self, key: str) -> bytes:
-        return self._d.decompress(self._path(key).read_bytes())
+        return self.codec.decompress(self._path(key).read_bytes())
 
     def exists(self, key: str) -> bool:
         return self._path(key).exists()

@@ -11,6 +11,15 @@ rule; the *global* storage graph is what ``repack`` optimizes offline,
 exactly mirroring Git's commit-then-`git repack` split that the paper
 analyzes (§4.4, Appendix A).
 
+Incremental Δ/Φ measurement: every measured matrix entry is persisted in the
+msgpack metadata keyed by ``(src, dst)`` together with the content
+fingerprints of both endpoint payloads.  ``build_cost_graph`` only re-measures
+entries whose endpoints changed (version contents are immutable, so in
+practice only pairs touching versions committed since the last measurement) —
+``repack`` no longer re-checkouts and re-compresses every version on every
+call.  All compression routes through the ObjectStore's :class:`Codec`, so
+measured Δ equals bytes actually stored.
+
 All metadata lives in one msgpack file (atomic rewrite); payloads live in the
 content-addressed :class:`ObjectStore`.
 """
@@ -18,6 +27,7 @@ content-addressed :class:`ObjectStore`.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 import tempfile
 import time
@@ -56,6 +66,42 @@ class VersionMeta:
     stored_bytes: int = 0
     phi: float = 0.0                    # recreation cost of this edge
     access_count: int = 0
+    content_fp: str = ""                # sha256 of the full (uncompressed) payload
+
+
+class _PayloadProvider:
+    """Lazy edge-payload encoder backing ``repack``.
+
+    Maps ``(src, dst)`` to ``(encoded_payload, stats)`` — a full encoding for
+    ``src == 0``, a delta otherwise — materializing checkouts and encodings
+    on first use only.  ``repack`` therefore encodes just the n−1 edges the
+    solver actually chose, not every measured candidate pair.
+    """
+
+    def __init__(self, store: "VersionStore") -> None:
+        self._store = store
+        self._flats: Dict[int, FlatTree] = {}
+        self._fulls: Dict[int, bytes] = {}
+        self._memo: Dict[Tuple[int, int], Tuple[bytes, Dict]] = {}
+
+    def flat(self, vid: int) -> FlatTree:
+        if vid not in self._flats:
+            self._flats[vid] = self._store._checkout_flat(vid)
+        return self._flats[vid]
+
+    def full_payload(self, vid: int) -> bytes:
+        if vid not in self._fulls:
+            self._fulls[vid] = encode_full(self.flat(vid))
+        return self._fulls[vid]
+
+    def __getitem__(self, key: Tuple[int, int]) -> Tuple[bytes, Dict]:
+        if key not in self._memo:
+            src, dst = key
+            if src == 0:
+                self._memo[key] = (self.full_payload(dst), {})
+            else:
+                self._memo[key] = encode_delta(self.flat(src), self.flat(dst))
+        return self._memo[key]
 
 
 class VersionStore:
@@ -73,6 +119,11 @@ class VersionStore:
         self.delta_hops = delta_hops
         self.versions: Dict[int, VersionMeta] = {}
         self._next_vid = 1
+        # measured Δ entries: (src, dst) -> {sfp, dfp, delta, payload_len,
+        # changed_blocks}; persisted in the msgpack metadata so repack only
+        # re-measures pairs whose endpoints changed
+        self._edge_cache: Dict[Tuple[int, int], Dict[str, Any]] = {}
+        self.last_measured_edges = 0
         self._meta_path = self.root / "meta.msgpack"
         if self._meta_path.exists():
             self._load_meta()
@@ -93,9 +144,7 @@ class VersionStore:
 
         full_payload = encode_full(flat)
         stored_base = None
-        best_bytes = None
         best_obj = full_payload
-        best_phi = None
         best_stats = None
         if parents:
             base_flat = self._checkout_flat(parents[0])
@@ -121,6 +170,7 @@ class VersionStore:
             object_key=key,
             stored_bytes=stored,
             phi=phi,
+            content_fp=hashlib.sha256(full_payload).hexdigest(),
         )
         self._save_meta()
         return vid
@@ -162,22 +212,29 @@ class VersionStore:
     # -------------------------------------------------------------- repack
     def build_cost_graph(
         self, *, extra_edges: bool = True
-    ) -> Tuple[VersionGraph, Dict[Tuple[int, int], Tuple[bytes, Dict]]]:
+    ) -> Tuple[VersionGraph, _PayloadProvider]:
         """Measure the Δ/Φ matrices over version-graph-adjacent pairs (plus
-        pairs within ``delta_hops``) and return (graph, encoded delta cache).
+        pairs within ``delta_hops``) and return (graph, payload provider).
 
         This is the paper's "revealing entries in the matrix" step: all-pairs
         is infeasible, so we measure around the derivation structure.
+        Measured entries are cached in the metadata keyed by the endpoints'
+        content fingerprints; unchanged entries are served from the cache
+        without touching payloads.  ``last_measured_edges`` records how many
+        entries were (re)measured by the call.
         """
         n = len(self.versions)
         g = VersionGraph(n, directed=True)
-        cache: Dict[Tuple[int, int], Tuple[bytes, Dict]] = {}
-        flats: Dict[int, FlatTree] = {}
+        provider = _PayloadProvider(self)
+        codec = self.objects.codec
+        measured = 0
 
-        def flat_of(v: int) -> FlatTree:
-            if v not in flats:
-                flats[v] = self._checkout_flat(v)
-            return flats[v]
+        # legacy metas (pre-fingerprint) get their fingerprint backfilled once
+        for vid, meta in self.versions.items():
+            if not meta.content_fp:
+                meta.content_fp = hashlib.sha256(
+                    provider.full_payload(vid)
+                ).hexdigest()
 
         # adjacency of the derivation DAG (undirected, for the hop ball)
         adj: Dict[int, set] = {v: set() for v in self.versions}
@@ -186,17 +243,25 @@ class VersionStore:
                 adj[v].add(p)
                 adj[p].add(v)
 
+        done: set = set()
         for vid, meta in self.versions.items():
-            full_payload = encode_full(flat_of(vid))
-            # measured materialization entry
-            import hashlib
-            import zstandard
-
-            stored = len(zstandard.ZstdCompressor(level=3).compress(full_payload))
+            fp = meta.content_fp
+            ent = self._edge_cache.get((0, vid))
+            if ent is None or ent["dfp"] != fp:
+                full_payload = provider.full_payload(vid)
+                ent = {
+                    "sfp": "",
+                    "dfp": fp,
+                    "delta": codec.compressed_size(full_payload),
+                    "payload_len": len(full_payload),
+                    "changed_blocks": 0,
+                }
+                self._edge_cache[(0, vid)] = ent
+                measured += 1
             g.set_materialization(
-                vid, stored, self.cost_model.phi_full(stored, meta.raw_bytes)
+                vid, ent["delta"],
+                self.cost_model.phi_full(ent["delta"], meta.raw_bytes),
             )
-            cache[(0, vid)] = (full_payload, {})
             # hop ball
             ball = {vid}
             frontier = {vid}
@@ -205,18 +270,32 @@ class VersionStore:
                 frontier = {y for x in frontier for y in adj[x]} - ball
                 ball |= frontier
             for other in sorted(ball - {vid}):
-                if (other, vid) in cache:
+                if (other, vid) in done:
                     continue
-                payload, stats = encode_delta(flat_of(other), flat_of(vid))
-                stored = len(
-                    zstandard.ZstdCompressor(level=3).compress(payload)
+                done.add((other, vid))
+                sfp = self.versions[other].content_fp
+                ent = self._edge_cache.get((other, vid))
+                if ent is None or ent["sfp"] != sfp or ent["dfp"] != fp:
+                    payload, stats = provider[(other, vid)]
+                    ent = {
+                        "sfp": sfp,
+                        "dfp": fp,
+                        "delta": codec.compressed_size(payload),
+                        "payload_len": len(payload),
+                        "changed_blocks": stats["changed_blocks"],
+                    }
+                    self._edge_cache[(other, vid)] = ent
+                    measured += 1
+                g.set_delta(
+                    other, vid, ent["delta"],
+                    self.cost_model.phi_delta(
+                        ent["delta"], ent["payload_len"], ent["changed_blocks"]
+                    ),
                 )
-                phi = self.cost_model.phi_delta(
-                    stored, len(payload), stats["changed_blocks"]
-                )
-                g.set_delta(other, vid, stored, phi)
-                cache[(other, vid)] = (payload, stats)
-        return g, cache
+        self.last_measured_edges = measured
+        if measured:
+            self._save_meta()  # persist new measurements for the next call
+        return g, provider
 
     def repack(
         self,
@@ -250,10 +329,9 @@ class VersionStore:
         self._save_meta()
         return {"before": before, "after": after}
 
-    def _apply_solution(self, sol: StorageSolution, cache) -> None:
+    def _apply_solution(self, sol: StorageSolution, cache: _PayloadProvider) -> None:
         for vid, parent in sol.parent.items():
             meta = self.versions[vid]
-            cost = sol.edge_cost(vid)
             if parent == 0:
                 payload, _ = cache[(0, vid)]
                 key, stored = self.objects.put(payload)
@@ -287,6 +365,9 @@ class VersionStore:
                 "versions": {
                     str(v): dataclasses.asdict(m) for v, m in self.versions.items()
                 },
+                "edge_cache": {
+                    f"{a},{b}": ent for (a, b), ent in self._edge_cache.items()
+                },
             },
             use_bin_type=True,
         )
@@ -305,6 +386,10 @@ class VersionStore:
         self.versions = {
             int(v): VersionMeta(**m) for v, m in obj["versions"].items()
         }
+        self._edge_cache = {}
+        for key, ent in obj.get("edge_cache", {}).items():
+            a, b = key.split(",")
+            self._edge_cache[(int(a), int(b))] = ent
 
     # -------------------------------------------------------------- limits
     def log(self) -> List[VersionMeta]:

@@ -1,0 +1,356 @@
+"""Seed (pre-array-refactor) solver implementations, kept as test oracles.
+
+These are the original dict-based Python-loop solvers, verbatim except that
+every iteration over an unordered container is canonicalized to sorted order
+(the seed iterated Python sets/dicts whose order is arbitrary among
+equal-cost ties; the vectorized solvers break ties to the smallest id, so the
+oracles must too).  The property tests in ``test_array_refactor.py`` assert
+the array-native solvers reproduce these trees/costs exactly on random
+instances.
+"""
+
+from __future__ import annotations
+
+import heapq
+import sys
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.version_graph import StorageSolution, VersionGraph
+
+
+# ------------------------------------------------------------------ Dijkstra
+def ref_dijkstra(
+    g: VersionGraph, *, weight: str = "phi", source: int = 0
+) -> Tuple[Dict[int, float], Dict[int, int]]:
+    dist: Dict[int, float] = {source: 0.0}
+    parent: Dict[int, int] = {}
+    done = set()
+    pq: list = [(0.0, source)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if u in done:
+            continue
+        done.add(u)
+        for v, c in g.out_edges(u):
+            w = c.phi if weight == "phi" else c.delta
+            nd = d + w
+            if v not in dist or nd < dist[v] - 1e-15:
+                dist[v] = nd
+                parent[v] = u
+                heapq.heappush(pq, (nd, v))
+    return dist, parent
+
+
+def ref_shortest_path_tree(g: VersionGraph, *, weight: str = "phi") -> StorageSolution:
+    dist, parent = ref_dijkstra(g, weight=weight)
+    missing = [i for i in g.versions() if i not in parent]
+    if missing:
+        raise ValueError(f"versions unreachable from root: {missing[:8]}")
+    return StorageSolution(parent={i: parent[i] for i in g.versions()}, graph=g)
+
+
+# ------------------------------------------------------------------- MST/MCA
+def ref_minimum_storage_tree(g: VersionGraph) -> StorageSolution:
+    if g.directed:
+        parent = _ref_edmonds_mca(g)
+    else:
+        parent = _ref_prim(g)
+    return StorageSolution(parent=parent, graph=g)
+
+
+def _ref_prim(g: VersionGraph) -> Dict[int, int]:
+    parent: Dict[int, int] = {}
+    best: Dict[int, float] = {0: 0.0}
+    in_tree = set()
+    pq: List[Tuple[float, int, int]] = [(0.0, 0, 0)]
+    while pq:
+        w, u, p = heapq.heappop(pq)
+        if u in in_tree:
+            continue
+        in_tree.add(u)
+        if u != 0:
+            parent[u] = p
+        for v, c in g.out_edges(u):
+            if v in in_tree:
+                continue
+            if v not in best or c.delta < best[v]:
+                best[v] = c.delta
+                heapq.heappush(pq, (c.delta, v, u))
+    missing = [i for i in g.versions() if i not in parent]
+    if missing:
+        raise ValueError(f"graph disconnected; unreachable: {missing[:8]}")
+    return parent
+
+
+def _ref_edmonds_mca(g: VersionGraph) -> Dict[int, int]:
+    edges = [(u, v, c.delta) for u, v, c in g.edges()]
+    nodes = list(g.vertices())
+    parent_edges = _ref_edmonds(nodes, edges, root=0)
+    parent = {v: u for (u, v) in parent_edges}
+    missing = [i for i in g.versions() if i not in parent]
+    if missing:
+        raise ValueError(f"no arborescence: unreachable {missing[:8]}")
+    return parent
+
+
+def _ref_edmonds(
+    nodes: List[int], edges: List[Tuple[int, int, float]], root: int
+) -> List[Tuple[int, int]]:
+    work = [(u, v, w, None) for (u, v, w) in edges if v != root and u != v]
+    chosen = _ref_edmonds_rec(set(nodes), work, root)
+    out = []
+    for e in chosen:
+        while e[3] is not None:  # unwind to the original edge
+            e = e[3]
+        out.append((e[0], e[1]))
+    return out
+
+
+def _ref_edmonds_rec(nodes, edges, root):
+    # 1. cheapest incoming edge per node
+    min_in: Dict[int, tuple] = {}
+    for e in edges:
+        u, v, w, _ = e
+        if v == root:
+            continue
+        cur = min_in.get(v)
+        if cur is None or w < cur[2]:
+            min_in[v] = e
+    for v in sorted(nodes):
+        if v != root and v not in min_in:
+            raise ValueError(f"vertex {v} unreachable from root")
+
+    # 2. detect a cycle among chosen edges
+    cycle = _ref_find_cycle(nodes, min_in, root)
+    if cycle is None:
+        return list(min_in.values())
+
+    # 3. contract the cycle into a supernode
+    cyc_set = set(cycle)
+    super_node = max(nodes) + 1
+    new_nodes = {n for n in nodes if n not in cyc_set} | {super_node}
+    cyc_cost = {v: min_in[v][2] for v in cycle}
+    new_edges = []
+    for e in edges:
+        u, v, w, _ = e
+        iu, iv = u in cyc_set, v in cyc_set
+        if iu and iv:
+            continue
+        if iv:
+            new_edges.append((u, super_node, w - cyc_cost[v], e))
+        elif iu:
+            new_edges.append((super_node, v, w, e))
+        else:
+            new_edges.append((u, v, w, e))
+
+    edges = None  # noqa: F841
+    sub = _ref_edmonds_rec(new_nodes, new_edges, root)
+
+    # 4. expand
+    result = []
+    enter_head = None
+    for e in sub:
+        u, v, w, payload = e
+        this_level = payload
+        result.append(this_level)
+        if v == super_node:
+            assert enter_head is None, "two edges entering one supernode"
+            enter_head = this_level[1]
+    assert enter_head is not None, "no edge entered the contracted cycle"
+    for v in cycle:
+        if v != enter_head:
+            result.append(min_in[v])
+    return result
+
+
+def _ref_find_cycle(nodes, min_in, root):
+    color: Dict[int, int] = {}
+    for start in sorted(nodes):
+        if start == root or color.get(start) == 2:
+            continue
+        path = []
+        v = start
+        while True:
+            if v == root or color.get(v) == 2:
+                break
+            if color.get(v) == 1:
+                idx = path.index(v)
+                for p in path:
+                    color[p] = 2
+                return path[idx:]
+            color[v] = 1
+            path.append(v)
+            v = min_in[v][0]
+        for p in path:
+            color[p] = 2
+    return None
+
+
+# ----------------------------------------------------------------------- LMG
+def ref_local_move_greedy(
+    g: VersionGraph,
+    budget: float,
+    *,
+    weights: Optional[Dict[int, float]] = None,
+    base: Optional[StorageSolution] = None,
+    spt: Optional[StorageSolution] = None,
+) -> StorageSolution:
+    base = base or ref_minimum_storage_tree(g)
+    spt = spt or ref_shortest_path_tree(g)
+    parent = dict(base.parent)
+    tree = StorageSolution(parent=parent, graph=g)
+
+    w_total = tree.storage_cost()
+    if w_total > budget + 1e-9:
+        raise ValueError(
+            f"budget {budget} below minimum storage {w_total}: infeasible"
+        )
+
+    children: Dict[int, Set[int]] = {v: set() for v in g.vertices()}
+    for i, p in parent.items():
+        children[p].add(i)
+    d: Dict[int, float] = {0: 0.0}
+
+    def _init_d(u: int) -> None:
+        for v in children[u]:
+            d[v] = d[u] + tree.edge_cost(v).phi
+            _init_d(v)
+
+    old_limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old_limit, g.n + 100))
+    try:
+        _init_d(0)
+        mass: Dict[int, float] = {}
+
+        def _init_mass(u: int) -> float:
+            m = (1.0 if weights is None else weights.get(u, 0.0)) if u != 0 else 0.0
+            for v in children[u]:
+                m += _init_mass(v)
+            mass[u] = m
+            return m
+
+        _init_mass(0)
+    finally:
+        sys.setrecursionlimit(old_limit)
+
+    def in_subtree(node: int, root_v: int) -> bool:
+        v = node
+        while v != 0:
+            if v == root_v:
+                return True
+            v = parent[v]
+        return False
+
+    candidates: Set[Tuple[int, int]] = {
+        (spt.parent[v], v) for v in g.versions() if spt.parent[v] != parent[v]
+    }
+
+    while candidates:
+        best_rho, best_edge = 0.0, None
+        for (u, v) in sorted(candidates):
+            if parent[v] == u:
+                continue
+            c_new = g.materialization_cost(v) if u == 0 else g.cost(u, v)
+            assert c_new is not None
+            c_old = tree.edge_cost(v)
+            dw = c_new.delta - c_old.delta
+            if w_total + dw > budget + 1e-9:
+                continue
+            if u != 0 and in_subtree(u, v):
+                continue
+            dd = (d[u] + c_new.phi) - d[v]
+            reduction = -dd * mass[v]
+            if reduction <= 0:
+                continue
+            rho = reduction / dw if dw > 0 else float("inf")
+            if rho > best_rho:
+                best_rho, best_edge = rho, (u, v, dw, dd)
+        if best_edge is None:
+            break
+        u, v, dw, dd = best_edge
+        old_u = parent[v]
+        children[old_u].discard(v)
+        children[u].add(v)
+        parent[v] = u
+        w_total += dw
+        m = mass[v]
+        a = old_u
+        while a != 0:
+            mass[a] -= m
+            a = parent[a]
+        a = u
+        while a != 0:
+            mass[a] += m
+            a = parent[a]
+        stack = [v]
+        while stack:
+            x = stack.pop()
+            d[x] += dd
+            stack.extend(children[x])
+        candidates.discard((u, v))
+
+    return tree
+
+
+# ------------------------------------------------------------------------ MP
+def _ref_is_ancestor(p: Dict[int, int], anc: int, node: int) -> bool:
+    x = node
+    while x != 0:
+        if x == anc:
+            return True
+        x = p.get(x, 0)
+    return False
+
+
+def ref_modified_prim(g: VersionGraph, theta: float) -> StorageSolution:
+    from repro.core.solvers.mp import InfeasibleError
+
+    INF = float("inf")
+    l: Dict[int, float] = {v: INF for v in g.vertices()}
+    d: Dict[int, float] = {v: INF for v in g.vertices()}
+    p: Dict[int, int] = {}
+    l[0] = d[0] = 0.0
+    in_tree = set()
+    pq = [(0.0, 0)]
+    while pq:
+        li, vi = heapq.heappop(pq)
+        if vi in in_tree or li > l[vi] + 1e-15:
+            continue
+        in_tree.add(vi)
+        for vj, c in g.out_edges(vi):
+            if vj in in_tree:
+                if c.phi + d[vi] <= d[vj] + 1e-15 and c.delta <= l[vj] - 1e-15:
+                    if _ref_is_ancestor(p, vj, vi):
+                        continue
+                    p[vj] = vi
+                    d[vj] = c.phi + d[vi]
+                    l[vj] = c.delta
+            else:
+                if c.phi + d[vi] <= theta + 1e-9 and c.delta < l[vj] - 1e-15:
+                    d[vj] = c.phi + d[vi]
+                    l[vj] = c.delta
+                    p[vj] = vi
+                    heapq.heappush(pq, (l[vj], vj))
+    missing = [i for i in g.versions() if i not in in_tree]
+    if missing:
+        dist, sp_parent = ref_dijkstra(g, weight="phi")
+        bad = [i for i in missing if dist.get(i, float("inf")) > theta + 1e-9]
+        if bad:
+            raise InfeasibleError(
+                f"theta={theta} infeasible: versions {bad[:5]} have SPT "
+                f"recreation above the bound"
+            )
+        for v in missing:
+            path = [v]
+            while path[-1] != 0:
+                path.append(sp_parent[path[-1]])
+            path.reverse()
+            for u, x in zip(path, path[1:]):
+                c = g.materialization_cost(x) if u == 0 else g.cost(u, x)
+                cand = d[u] + c.phi
+                if x not in in_tree or cand < d[x] - 1e-15:
+                    p[x] = u
+                    d[x] = cand
+                    l[x] = c.delta
+                    in_tree.add(x)
+    return StorageSolution(parent={i: p[i] for i in g.versions()}, graph=g)

@@ -158,6 +158,7 @@ class TestEndToEndDelta:
 
 
 # ----------------------------------------------------------------- hypothesis
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 

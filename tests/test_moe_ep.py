@@ -22,8 +22,11 @@ SCRIPT = textwrap.dedent("""
     from repro.models import moe as moe_lib
     from repro.models import moe_ep
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:  # older jax: axes are Auto by default and axis_types doesn't exist
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
 
     cfg = dataclasses.replace(
         ARCHS["phi3.5-moe-42b-a6.6b"].reduced(),

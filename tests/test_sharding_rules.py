@@ -11,8 +11,17 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.distributed.sharding import DEFAULT_RULES, spec_for
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: old builds take ((name, size), ...),
+    newer ones take (axis_sizes, axis_names)."""
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 class TestSpecFor:

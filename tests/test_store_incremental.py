@@ -1,0 +1,128 @@
+"""Store-layer refactor tests: one-codec compression (zstd→zlib fallback),
+incremental Δ/Φ measurement, and repack idempotence + checkout roundtrips."""
+
+import numpy as np
+import pytest
+
+from repro.store import Codec, ObjectStore, VersionStore, flatten_payload
+
+from test_store import build_linear_history, make_payload, perturb
+
+
+class TestCodec:
+    def test_zlib_roundtrip(self):
+        c = Codec(backend="zlib")
+        blob = c.compress(b"versioned bytes " * 500)
+        assert c.decompress(blob) == b"versioned bytes " * 500
+        assert c.compressed_size(b"versioned bytes " * 500) == len(blob)
+
+    def test_magic_dispatch_reads_zlib_everywhere(self):
+        # a zlib-written blob decompresses regardless of the default backend
+        writer = Codec(backend="zlib")
+        reader = Codec()  # whatever backend the environment provides
+        assert reader.decompress(writer.compress(b"x" * 100)) == b"x" * 100
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError):
+            Codec(backend="lz77")
+
+    def test_objectstore_with_explicit_zlib(self, tmp_path):
+        st = ObjectStore(tmp_path, codec=Codec(backend="zlib"))
+        k1, s1 = st.put(b"hello world" * 1000)
+        k2, _ = st.put(b"hello world" * 1000)
+        assert k1 == k2  # content-addressed dedup
+        assert st.get(k1) == b"hello world" * 1000
+        assert s1 < 11000
+
+
+class TestIncrementalCostGraph:
+    def test_second_build_measures_nothing(self, tmp_path):
+        store = VersionStore(tmp_path)
+        build_linear_history(store, n=5)
+        store.build_cost_graph()
+        first = store.last_measured_edges
+        assert first > 0
+        g2, _ = store.build_cost_graph()
+        assert store.last_measured_edges == 0
+        assert g2.n == 5
+
+    def test_new_commit_measures_only_the_delta(self, tmp_path):
+        store = VersionStore(tmp_path)
+        vids, payload = build_linear_history(store, n=6)
+        store.build_cost_graph()
+        full = store.last_measured_edges
+        rng = np.random.RandomState(42)
+        store.commit(perturb(payload, rng), parents=[vids[-1]])
+        store.build_cost_graph()
+        incremental = store.last_measured_edges
+        assert 0 < incremental < full
+
+    def test_cache_survives_reopen(self, tmp_path):
+        store = VersionStore(tmp_path)
+        build_linear_history(store, n=4)
+        store.build_cost_graph()
+        del store
+        store2 = VersionStore(tmp_path)
+        store2.build_cost_graph()
+        assert store2.last_measured_edges == 0
+
+    def test_cached_graph_matches_fresh_measurement(self, tmp_path):
+        store = VersionStore(tmp_path)
+        build_linear_history(store, n=5)
+        g1, _ = store.build_cost_graph()
+        g2, _ = store.build_cost_graph()  # fully from cache
+        e1 = {(s, d): (c.delta, c.phi) for s, d, c in g1.edges()}
+        e2 = {(s, d): (c.delta, c.phi) for s, d, c in g2.edges()}
+        assert e1 == e2
+
+
+class TestRepackRoundtrip:
+    @pytest.mark.parametrize("solver,kw", [
+        ("mca", {}),
+        ("spt", {}),
+        ("last", {"alpha": 2.0}),
+        ("gith", {"window": 5, "max_depth": 5}),
+        ("lmg", {"budget_mult": 1.4}),
+        ("mp", {"theta_mult": 1.5}),
+    ])
+    def test_repack_then_checkout_equals_original(self, tmp_path, solver, kw):
+        store = VersionStore(tmp_path)
+        vids, _ = build_linear_history(store, n=6)
+        originals = {v: store.checkout(v) for v in vids}
+        kw = dict(kw)
+        if "budget_mult" in kw:
+            from repro.core import minimum_storage_tree
+
+            g, _ = store.build_cost_graph()
+            kw = {"budget": minimum_storage_tree(g).storage_cost()
+                  * kw["budget_mult"]}
+        elif "theta_mult" in kw:
+            from repro.core import shortest_path_tree
+
+            g, _ = store.build_cost_graph()
+            kw = {"theta": shortest_path_tree(g).max_recreation()
+                  * kw["theta_mult"]}
+        store.repack(solver, **kw)
+        for v in vids:
+            rec = store.checkout(v)
+            assert set(rec) == set(originals[v])
+            for k in originals[v]:
+                np.testing.assert_array_equal(rec[k], originals[v][k])
+
+    def test_repack_idempotent(self, tmp_path):
+        store = VersionStore(tmp_path)
+        vids, _ = build_linear_history(store, n=6)
+        store.repack("mca")
+        bytes_1 = store.storage_bytes()
+        bases_1 = [m.stored_base for m in store.log()]
+        stats = store.repack("mca")
+        assert store.storage_bytes() == bytes_1
+        assert [m.stored_base for m in store.log()] == bases_1
+        assert stats["before"]["storage_bytes"] == stats["after"]["storage_bytes"]
+        # second repack's cost graph came fully from the cache
+        assert store.last_measured_edges == 0
+
+    def test_fingerprints_recorded_on_commit(self, tmp_path):
+        store = VersionStore(tmp_path)
+        vids, _ = build_linear_history(store, n=3)
+        assert all(len(m.content_fp) == 64 for m in store.log())
