@@ -9,6 +9,15 @@ directly in the flat ``EdgeArrays`` representation, no per-edge dict traffic
 * LMG at budget 1.05 × C_min (Problem 3);
 * MP at θ = 1.5 × max SPT recreation (Problem 6).
 
+Both solver backends are recorded: ``solvers`` holds the NumPy (Python-heap)
+timings, ``solvers_jax`` the jitted backend (SPT Bellman-Ford relaxation, MP
+scan, LMG device scoring).  The jax column measures the steady-state jitted
+XLA path — ``pallas=False`` (on CPU the Pallas kernels run under the
+interpreter, which benchmarks the interpreter, not the kernel) and a warmup
+call per (solver, shape-bucket) so compile time is excluded.  MCA is
+host-only (directed instances use Edmonds) and appears only under
+``solvers``.
+
 Results append to ``BENCH_solver_scale.json`` in the repo root: one entry
 per run carrying the whole (n → seconds) trajectory per solver, so repeated
 runs across PRs accumulate a history.  Also exposed as the ``solver_scale``
@@ -17,6 +26,7 @@ orchestrator fast).
 
 Run standalone:
     PYTHONPATH=src python -m benchmarks.solver_scale [--ns 1000,5000,50000]
+        [--backends numpy,jax]
 """
 
 from __future__ import annotations
@@ -25,7 +35,7 @@ import argparse
 import json
 import time
 from pathlib import Path
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence
 
 from repro.core import (
     WorkloadSpec,
@@ -40,6 +50,7 @@ from repro.core.solvers.gith import git_heuristic
 from .common import Row
 
 DEFAULT_NS = (1_000, 5_000, 20_000, 50_000)
+DEFAULT_BACKENDS = ("numpy", "jax")
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_solver_scale.json"
 
 
@@ -51,7 +62,20 @@ def _spec(n: int, seed: int = 0) -> WorkloadSpec:
     )
 
 
-def sweep(ns: Iterable[int], seed: int = 0) -> List[Dict]:
+def _timed(fn, *, warmup: bool = False) -> tuple:
+    """(result, seconds); ``warmup=True`` runs once untimed first (jit)."""
+    if warmup:
+        fn()
+    t0 = time.monotonic()
+    out = fn()
+    return out, time.monotonic() - t0
+
+
+def sweep(
+    ns: Iterable[int],
+    seed: int = 0,
+    backends: Sequence[str] = DEFAULT_BACKENDS,
+) -> List[Dict]:
     results: List[Dict] = []
     for n in ns:
         t0 = time.monotonic()
@@ -66,31 +90,48 @@ def sweep(ns: Iterable[int], seed: int = 0) -> List[Dict]:
             "solvers": {},
         }
 
-        t0 = time.monotonic()
-        mst = minimum_storage_tree(g)
-        entry["solvers"]["mca"] = round(time.monotonic() - t0, 4)
+        mst, t = _timed(lambda: minimum_storage_tree(g))
+        entry["solvers"]["mca"] = round(t, 4)
 
-        t0 = time.monotonic()
-        spt = shortest_path_tree(g)
-        entry["solvers"]["spt"] = round(time.monotonic() - t0, 4)
+        spt, t = _timed(lambda: shortest_path_tree(g))
+        entry["solvers"]["spt"] = round(t, 4)
 
-        t0 = time.monotonic()
-        git_heuristic(g, window=10, max_depth=50)
-        entry["solvers"]["gith"] = round(time.monotonic() - t0, 4)
+        _, t = _timed(lambda: git_heuristic(g, window=10, max_depth=50))
+        entry["solvers"]["gith"] = round(t, 4)
 
         budget = mst.storage_cost() * 1.05
-        t0 = time.monotonic()
-        lmg = local_move_greedy(g, budget, base=mst, spt=spt)
-        entry["solvers"]["lmg"] = round(time.monotonic() - t0, 4)
+        lmg, t = _timed(lambda: local_move_greedy(g, budget, base=mst, spt=spt))
+        entry["solvers"]["lmg"] = round(t, 4)
         entry["lmg_budget_mult"] = 1.05
         entry["lmg_sum_rec_vs_mst"] = round(
             lmg.sum_recreation() / max(mst.sum_recreation(), 1e-12), 6
         )
 
         theta = spt.max_recreation() * 1.5
-        t0 = time.monotonic()
-        modified_prim(g, theta)
-        entry["solvers"]["mp"] = round(time.monotonic() - t0, 4)
+        _, t = _timed(lambda: modified_prim(g, theta))
+        entry["solvers"]["mp"] = round(t, 4)
+
+        if "jax" in backends:
+            jx: Dict[str, float] = {}
+            spt_j, t = _timed(
+                lambda: shortest_path_tree(g, backend="jax"), warmup=True
+            )
+            jx["spt"] = round(t, 4)
+            _, t = _timed(
+                lambda: local_move_greedy(
+                    g, budget, base=mst, spt=spt_j, backend="jax"
+                ),
+                warmup=True,
+            )
+            jx["lmg"] = round(t, 4)
+            _, t = _timed(
+                lambda: modified_prim(g, theta, backend="jax"), warmup=True
+            )
+            jx["mp"] = round(t, 4)
+            entry["solvers_jax"] = jx
+            entry["spt_jax_speedup"] = round(
+                entry["solvers"]["spt"] / max(jx["spt"], 1e-9), 3
+            )
 
         results.append(entry)
     return results
@@ -114,12 +155,13 @@ def solver_scale(ns: Optional[Iterable[int]] = None) -> Iterable[Row]:
     results = sweep(ns)
     record(results)
     for entry in results:
-        for solver, seconds in entry["solvers"].items():
-            yield Row(
-                name=f"solver_scale/{solver}/n{entry['n']}",
-                us_per_call=seconds * 1e6,
-                derived=f"edges={entry['edges']}",
-            )
+        for col, suffix in (("solvers", ""), ("solvers_jax", "_jax")):
+            for solver, seconds in entry.get(col, {}).items():
+                yield Row(
+                    name=f"solver_scale/{solver}{suffix}/n{entry['n']}",
+                    us_per_call=seconds * 1e6,
+                    derived=f"edges={entry['edges']}",
+                )
 
 
 def main() -> None:
@@ -127,6 +169,11 @@ def main() -> None:
     ap.add_argument(
         "--ns", default=",".join(str(n) for n in DEFAULT_NS),
         help="comma-separated instance sizes",
+    )
+    ap.add_argument(
+        "--backends", default=",".join(DEFAULT_BACKENDS),
+        help="comma-separated backends to time (numpy is always run; "
+        "'jax' adds the jitted columns)",
     )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -136,7 +183,11 @@ def main() -> None:
         ap.error(f"--ns must be comma-separated integers, got {args.ns!r}")
     if not ns:
         ap.error("--ns is empty: nothing to sweep")
-    results = sweep(ns, seed=args.seed)
+    backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
+    bad = set(backends) - {"numpy", "jax"}
+    if bad:
+        ap.error(f"unknown backends: {sorted(bad)}")
+    results = sweep(ns, seed=args.seed, backends=backends)
     record(results)
     print(json.dumps(results, indent=2))
 

@@ -67,12 +67,14 @@ def solve_problem6(g: VersionGraph, theta: float) -> StorageSolution:
     return modified_prim(g, theta)
 
 
-# registry used by benchmarks / the version store's repack policy
+# registry used by benchmarks / the version store's repack policy; the
+# array-native solvers take backend="numpy"|"jax" (+ pallas=True to route
+# reductions through the Pallas kernels — see core/solvers/__init__.py)
 SOLVERS = {
-    "mca": lambda g, **kw: minimum_storage_tree(g),
-    "spt": lambda g, **kw: shortest_path_tree(g),
+    "mca": lambda g, **kw: minimum_storage_tree(g, **kw),
+    "spt": lambda g, **kw: shortest_path_tree(g, **kw),
     "lmg": lambda g, budget, **kw: local_move_greedy(g, budget, **kw),
-    "mp": lambda g, theta, **kw: modified_prim(g, theta),
+    "mp": lambda g, theta, **kw: modified_prim(g, theta, **kw),
     "last": lambda g, alpha=2.0, **kw: last_tree(g, alpha),
     "gith": lambda g, window=10, max_depth=50, **kw: git_heuristic(
         g, window=window, max_depth=max_depth

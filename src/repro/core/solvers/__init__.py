@@ -1,0 +1,33 @@
+"""The paper's storage-graph solvers (§4), with selectable compute backends.
+
+Every array-native solver takes ``backend="numpy"`` (default) or
+``backend="jax"``:
+
+* ``numpy`` — the heap-driven host implementations; the reference/oracle
+  path, always available, and the fallback wherever the jitted formulation
+  does not apply (directed MCA cycle contraction).
+* ``jax`` — jitted device loops in :mod:`.jax_backend`: whole-graph
+  Bellman-Ford SSSP, one-``fori_loop`` Prim and Modified-Prim, and the LMG
+  per-round candidate scoring.  Outputs are **bit-identical** to the NumPy
+  backend (same trees, same float costs); ``tests/test_jax_backend.py``
+  enforces this on the 56-instance property suite.
+
+``pallas=True`` additionally routes the inner segment-min / argmin
+reductions through the Pallas kernels of :mod:`repro.kernels.segment_ops`.
+CPU caveat: on this container Pallas runs with ``interpret=True`` — the
+kernel body executes under the Pallas interpreter, which is correct but far
+slower than compiled XLA; benchmarks therefore measure the jitted XLA path
+(``pallas=False``), and the kernels compile for real on TPU backends.
+
+Solvers: :mod:`.spt` (Problem 2), :mod:`.mst` (Problem 1 — Prim / Edmonds
+MCA), :mod:`.lmg` (Problems 3/5), :mod:`.mp` (Problems 4/6), :mod:`.last`,
+:mod:`.gith`, :mod:`.exact`.
+"""
+
+# Shared numerical slacks.  The jax backend's bit-identity contract requires
+# both backends to apply *identical* tolerances in every relaxation and
+# feasibility check, so they live here rather than as per-module literals.
+EPS = 1e-15            # relaxation acceptance slack (improvements ≤ EPS are
+                       # rejected; ties within (0, EPS] are order-dependent
+                       # and outside the parity contract)
+CONSTRAINT_TOL = 1e-9  # θ / budget feasibility slack

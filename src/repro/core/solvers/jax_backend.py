@@ -1,0 +1,408 @@
+"""Accelerator-backed solver kernels: jitted SSSP / Prim / Modified-Prim /
+LMG-scoring over the flat :class:`~repro.core.edge_arrays.EdgeArrays`.
+
+Every solver in this package takes ``backend="numpy"|"jax"``; this module is
+the ``"jax"`` implementation.  The NumPy solvers remain the default and the
+oracle — the jitted paths are **bit-identical** to them (same trees, same
+float costs; enforced by ``tests/test_jax_backend.py`` on the 56-instance
+property suite):
+
+* :func:`sssp` — whole-graph Bellman-Ford relaxation to fixpoint: each round
+  gathers ``dist[src] + w`` over the padded in-edge CSR rows and reduces with
+  the Pallas segment-min kernel, accepting only >EPS improvements — the same
+  slack the heap Dijkstra applies.  Distances converge to the least fixpoint,
+  which is exactly what the heap Dijkstra computes (both evaluate path costs
+  as prefix-sum left-folds); parents are then extracted per vertex
+  as the in-edge minimizing ``(dist[u], u)`` among those attaining the final
+  distance — the heap's pop-order tie-break.
+* :func:`prim` — full Prim (undirected Problem 1) as one jitted ``fori_loop``:
+  vertex selection is a masked argmin (first-min == smallest id, the heap's
+  ``(w, v)`` order) and each accepted vertex relaxes its padded out-row with
+  one masked scatter.
+* :func:`modified_prim_core` — the MP loop (Algorithm 2) jitted end to end,
+  including the sequential in-tree re-parenting (lines 10–17) with its
+  ancestor-chain walk as a nested ``while_loop``; the rare unreached-version
+  SPT splice stays host-side in :mod:`.mp` (shared with the NumPy path).
+* :func:`lmg_score_round` — the LMG per-round candidate scoring (ρ reduction
+  + argmax) on device; the splice bookkeeping stays host-side in :mod:`.lmg`.
+
+Layout: CSR rows are padded to dense ``(rows, max_degree)`` matrices (+inf /
+sentinel-id filled) so every reduction is a fixed-shape row op — the root's
+out-row (degree ``n``) is handled separately before the main loops.  Shapes
+are bucketed (rows to powers of two, widths to multiples of 8) so jit caches
+are shared across same-bucket instances.
+
+All public entry points run under ``jax.experimental.enable_x64`` — the cost
+matrices are float64 and bit-identity requires f64 arithmetic on device.
+``pallas=True`` routes reductions through the Pallas kernels of
+:mod:`repro.kernels.segment_ops` (``interpret=True`` on CPU — correct but
+slow, the interpreter executes the kernel body op by op); ``pallas=False``
+(the CPU-benchmark default) lowers the same reductions through plain XLA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+from ...kernels.segment_ops import min_argmin_1d, segment_min_rows
+from ..edge_arrays import EdgeArrays
+from . import CONSTRAINT_TOL, EPS
+
+# the padded layouts are dense (rows × max_degree): refuse instances whose
+# degree skew would blow that up (a hub vertex that is delta-base for a
+# large fraction of versions) instead of silently exhausting memory — the
+# NumPy backend handles those in CSR form; a degree-bucketed layout is the
+# ROADMAP follow-on
+MAX_PADDED_CELLS = 1 << 25
+
+
+def _check_padded_size(nvp: int, width: int, what: str) -> None:
+    if nvp * width > MAX_PADDED_CELLS:
+        raise ValueError(
+            f"backend='jax' padded {what} layout would need {nvp}x{width} "
+            f"cells (> {MAX_PADDED_CELLS}): instance degree skew too high "
+            f"for the dense row padding — use backend='numpy' (bit-identical)"
+        )
+
+
+def _bucket_rows(k: int) -> int:
+    """Next power of two ≥ k (≥ 8): row-count buckets share jit caches."""
+    b = 8
+    while b < k:
+        b *= 2
+    return b
+
+
+def _bucket_width(k: int) -> int:
+    """Row widths padded to multiples of 8."""
+    return max(8, -(-k // 8) * 8)
+
+
+# ------------------------------------------------------------- padded layouts
+@dataclasses.dataclass(frozen=True)
+class PaddedRows:
+    """Dense padded view of CSR rows: ``ids[r, c]`` is the c-th neighbour of
+    row r (sentinel ``nvp`` past the end), weights +inf-padded."""
+
+    nvp: int                 # bucketed row count (real rows are 0..nv-1)
+    ids: np.ndarray          # int64 [nvp, D]
+    w: np.ndarray            # float64 [nvp, D]
+    w2: Optional[np.ndarray] = None  # second cost component, same layout
+
+
+def padded_in_rows(ea: EdgeArrays, *, weight: str = "phi") -> PaddedRows:
+    """In-edges per vertex (the SSSP relaxation layout): ``ids`` holds edge
+    sources, ``w`` the chosen cost component."""
+    nv = ea.n + 1
+    nvp = _bucket_rows(nv)
+    indeg = np.diff(ea.rrow_ptr[: nv + 1])
+    d = _bucket_width(int(indeg.max()) if ea.m else 1)
+    _check_padded_size(nvp, d, "in-edge")
+    ids = np.full((nvp, d), nvp, dtype=np.int64)
+    w = np.full((nvp, d), np.inf, dtype=np.float64)
+    if ea.m:
+        rows = np.repeat(np.arange(nv, dtype=np.int64), indeg)
+        cols = np.arange(ea.m, dtype=np.int64) - ea.rrow_ptr[rows]
+        wsrc = ea.phi if weight == "phi" else ea.delta
+        ids[rows, cols] = ea.src[ea.rperm]
+        w[rows, cols] = wsrc[ea.rperm]
+    return PaddedRows(nvp=nvp, ids=ids, w=w)
+
+
+def padded_out_rows(ea: EdgeArrays) -> Tuple[PaddedRows, np.ndarray, np.ndarray, np.ndarray]:
+    """Out-edges per non-root vertex, plus the root's (degree-n) row dense:
+    ``(rows, root_dst, root_delta, root_phi)`` — root arrays padded to nvp."""
+    nv = ea.n + 1
+    nvp = _bucket_rows(nv)
+    outdeg = np.diff(ea.row_ptr[: nv + 1])
+    d = _bucket_width(int(outdeg[1:].max()) if nv > 1 and outdeg[1:].size else 1)
+    _check_padded_size(nvp, d, "out-edge")
+    ids = np.full((nvp, d), nvp, dtype=np.int64)
+    delta = np.full((nvp, d), np.inf, dtype=np.float64)
+    phi = np.full((nvp, d), np.inf, dtype=np.float64)
+    s1 = int(ea.row_ptr[1])
+    m1 = ea.m - s1
+    if m1:
+        rows = np.repeat(np.arange(1, nv, dtype=np.int64), outdeg[1:])
+        cols = np.arange(s1, ea.m, dtype=np.int64) - ea.row_ptr[rows]
+        ids[rows, cols] = ea.dst[s1:]
+        delta[rows, cols] = ea.delta[s1:]
+        phi[rows, cols] = ea.phi[s1:]
+    root_dst = np.full(nvp, nvp + 1, dtype=np.int64)  # nvp+1 => scatter-drop
+    root_delta = np.full(nvp, np.inf, dtype=np.float64)
+    root_phi = np.full(nvp, np.inf, dtype=np.float64)
+    root_dst[:s1] = ea.dst[:s1]
+    root_delta[:s1] = ea.delta[:s1]
+    root_phi[:s1] = ea.phi[:s1]
+    return (
+        PaddedRows(nvp=nvp, ids=ids, w=delta, w2=phi),
+        root_dst, root_delta, root_phi,
+    )
+
+
+# ------------------------------------------------------------------- (a) SSSP
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _sssp_jit(ps, pw, use_pallas):
+    nvp = ps.shape[0]
+    dist0 = jnp.full((nvp + 1,), jnp.inf, jnp.float64).at[0].set(0.0)
+
+    def cond(c):
+        return c[1]
+
+    def body(c):
+        dist, _ = c
+        cand = dist[ps] + pw
+        row = segment_min_rows(cand, use_pallas=use_pallas)
+        # accept only >EPS improvements — the same slack the heap Dijkstra
+        # applies, so near-tie path costs settle identically (for costs whose
+        # differences are either 0 or >EPS, both equal the exact fixpoint;
+        # ties *within* (0, EPS] are order-dependent in both backends and
+        # outside the bit-identity contract, as they already were for the
+        # NumPy-vs-seed equivalence)
+        new = jnp.where(row < dist[:nvp] - EPS, row, dist[:nvp])
+        return dist.at[:nvp].set(new), jnp.any(new < dist[:nvp])
+
+    dist, _ = lax.while_loop(cond, body, (dist0, jnp.bool_(True)))
+    # parent: among in-edges attaining dist[v], the min-(dist[u], u) source —
+    # exactly the first entry the heap Dijkstra would have popped
+    du = dist[ps]
+    elig = (du + pw == dist[:nvp, None]) & jnp.isfinite(dist[:nvp, None])
+    m1 = segment_min_rows(
+        jnp.where(elig, du, jnp.inf), use_pallas=use_pallas
+    )
+    pu = jnp.min(jnp.where(elig & (du == m1[:, None]), ps, nvp + 1), axis=1)
+    parent = jnp.where(jnp.isfinite(dist[:nvp]) & (pu <= nvp), pu, -1)
+    return dist[:nvp], parent.at[0].set(-1)
+
+
+def sssp(
+    ea: EdgeArrays, *, weight: str = "phi", pallas: bool = False
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Single-source shortest paths from the root — the jax counterpart of
+    :func:`repro.core.solvers.spt.dijkstra_arrays` (bit-identical output)."""
+    with enable_x64():
+        rows = padded_in_rows(ea, weight=weight)
+        dist, parent = _sssp_jit(
+            jnp.asarray(rows.ids), jnp.asarray(rows.w), pallas
+        )
+        nv = ea.n + 1
+        return np.asarray(dist)[:nv], np.asarray(parent)[:nv]
+
+
+# ------------------------------------------------------------------- (b) Prim
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _prim_jit(pd, pw, root_dst, root_w, n, use_pallas):
+    nvp = pd.shape[0]
+    inf = jnp.inf
+    best = jnp.full((nvp + 1,), inf, jnp.float64)
+    bp = jnp.full((nvp + 1,), -1, jnp.int64)
+    in_tree = jnp.zeros((nvp + 1,), jnp.bool_).at[0].set(True)
+    # the root's whole out-row relaxes first (its pop is always step 0)
+    best = best.at[root_dst].set(root_w, mode="drop")
+    bp = bp.at[root_dst].set(0, mode="drop")
+
+    def body(_, state):
+        best, bp, in_tree = state
+        key = jnp.where(in_tree[:nvp], inf, best[:nvp])
+        bmin, u = min_argmin_1d(key, use_pallas=use_pallas)
+        active = jnp.isfinite(bmin)
+        in_tree = in_tree.at[u].set(True)
+        vs = pd[u]
+        ws = pw[u]
+        imp = active & ~in_tree[vs] & (ws < best[vs])
+        idx = jnp.where(imp, vs, nvp + 1)
+        best = best.at[idx].set(ws, mode="drop")
+        bp = bp.at[idx].set(u, mode="drop")
+        return best, bp, in_tree
+
+    best, bp, in_tree = lax.fori_loop(0, n, body, (best, bp, in_tree))
+    return bp[:nvp]
+
+
+def prim(ea: EdgeArrays, *, pallas: bool = False) -> np.ndarray:
+    """Prim over the undirected instance; returns the parent array (index 0
+    and unreachable vertices hold ``-1``)."""
+    with enable_x64():
+        rows, root_dst, root_delta, _ = padded_out_rows(ea)
+        bp = _prim_jit(
+            jnp.asarray(rows.ids), jnp.asarray(rows.w),
+            jnp.asarray(root_dst), jnp.asarray(root_delta),
+            jnp.int64(ea.n), pallas,
+        )
+        return np.asarray(bp)[: ea.n + 1]
+
+
+# -------------------------------------------------------- (c) Modified Prim
+def _is_ancestor(p, anc, node):
+    """Jitted ancestor-chain walk: True iff ``anc`` is on ``node``'s chain."""
+
+    def cond(x):
+        return (x > 0) & (x != anc)
+
+    def body(x):
+        px = p[x]
+        return jnp.where(px < 0, 0, px)
+
+    return lax.while_loop(cond, body, node) == anc
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _mp_jit(pd, pdelta, pphi, root_dst, root_delta, root_phi, n, theta,
+            use_pallas):
+    nvp = pd.shape[0]
+    inf = jnp.inf
+    l = jnp.full((nvp + 1,), inf, jnp.float64).at[0].set(0.0)
+    d = jnp.full((nvp + 1,), inf, jnp.float64).at[0].set(0.0)
+    p = jnp.full((nvp + 1,), -1, jnp.int64)
+    in_tree = jnp.zeros((nvp + 1,), jnp.bool_).at[0].set(True)
+    # the root pops first: frontier-relax its whole out-row under θ
+    rimp = root_phi <= theta + CONSTRAINT_TOL
+    ridx = jnp.where(rimp, root_dst, nvp + 1)
+    d = d.at[ridx].set(root_phi, mode="drop")
+    l = l.at[ridx].set(root_delta, mode="drop")
+    p = p.at[ridx].set(0, mode="drop")
+
+    def step(_, state):
+        l, d, p, in_tree = state
+        key = jnp.where(in_tree[:nvp], inf, l[:nvp])
+        li, vi = min_argmin_1d(key, use_pallas=use_pallas)
+        active = jnp.isfinite(li)
+        in_tree = in_tree.at[vi].set(in_tree[vi] | active)
+        vs = pd[vi]
+        it = in_tree[vs]  # snapshot used by the frontier mask below
+
+        # in-tree re-parenting (Algorithm 2 lines 10-17): sequential, each
+        # acceptance rewires the ancestor chain consulted by the next slot
+        def reparent(k, s):
+            l, d, p = s
+            vj = vs[k]
+            cdel = pdelta[vi, k]
+            cphi = pphi[vi, k]
+            ok = (
+                active & in_tree[vj]
+                & (cphi + d[vi] <= d[vj] + EPS)
+                & (cdel <= l[vj] - EPS)
+            )
+            ok &= ~lax.cond(
+                ok, lambda: _is_ancestor(p, vj, vi), lambda: jnp.bool_(True)
+            )
+            tgt = jnp.where(ok, vj, nvp + 1)
+            p = p.at[tgt].set(vi, mode="drop")
+            d = d.at[tgt].set(cphi + d[vi], mode="drop")
+            l = l.at[tgt].set(cdel, mode="drop")
+            return l, d, p
+
+        l, d, p = lax.fori_loop(0, pd.shape[1], reparent, (l, d, p))
+
+        # frontier relaxation under θ — one masked row op (padding carries
+        # +inf costs, so both conditions mask it out)
+        dts = pdelta[vi]
+        phs = pphi[vi]
+        imp = (active & ~it & (phs + d[vi] <= theta + CONSTRAINT_TOL)
+               & (dts < l[vs] - EPS))
+        idx = jnp.where(imp, vs, nvp + 1)
+        d = d.at[idx].set(phs + d[vi], mode="drop")
+        l = l.at[idx].set(dts, mode="drop")
+        p = p.at[idx].set(vi, mode="drop")
+        return l, d, p, in_tree
+
+    l, d, p, in_tree = lax.fori_loop(0, n, step, (l, d, p, in_tree))
+    return l[:nvp], d[:nvp], p[:nvp], in_tree[:nvp]
+
+
+def modified_prim_core(
+    ea: EdgeArrays, theta: float, *, pallas: bool = False
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """The jitted MP main loop; returns ``(l, d, p, in_tree)`` host arrays.
+    Unreached versions (``~in_tree``) are handled by the caller's SPT splice
+    (shared with the NumPy backend in :mod:`.mp`)."""
+    with enable_x64():
+        rows, root_dst, root_delta, root_phi = padded_out_rows(ea)
+        l, d, p, in_tree = _mp_jit(
+            jnp.asarray(rows.ids), jnp.asarray(rows.w), jnp.asarray(rows.w2),
+            jnp.asarray(root_dst), jnp.asarray(root_delta),
+            jnp.asarray(root_phi), jnp.int64(ea.n), jnp.float64(theta),
+            pallas,
+        )
+        nv = ea.n + 1
+        # writable copies: the caller's SPT splice mutates these in place
+        return (
+            np.array(l[:nv]), np.array(d[:nv]),
+            np.array(p[:nv]), np.array(in_tree[:nv]),
+        )
+
+
+# ------------------------------------------------------------ (d) LMG scoring
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _lmg_score_jit(cu, cv, cand_delta, cand_phi, active, cur_delta, d, mass,
+                   tin, size, w_total, budget, use_pallas):
+    dw = cand_delta - cur_delta[cv]
+    ok = active & (w_total + dw <= budget + CONSTRAINT_TOL)
+    dd = (d[cu] + cand_phi) - d[cv]
+    reduction = -dd * mass[cv]
+    ok &= reduction > 0
+    # cycle test: u inside subtree(v) ⇔ tin[v] ≤ tin[u] < tin[v]+size[v]
+    ok &= ~((tin[cv] <= tin[cu]) & (tin[cu] < tin[cv] + size[cv]))
+    pos = ok & (dw > 0)
+    rho = jnp.where(
+        pos,
+        reduction / jnp.where(pos, dw, 1.0),
+        jnp.where(ok & (dw <= 0), jnp.inf, -1.0),
+    )
+    _, i = min_argmin_1d(-rho, use_pallas=use_pallas)
+    return i, rho[i], dw[i], dd[i], jnp.any(ok)
+
+
+class LmgScorer:
+    """Device-resident candidate set ξ; scores one LMG round per call.
+
+    The candidate arrays are uploaded once; per-round tree state (d / mass /
+    tin / size / current edge Δ) is shipped each call — the splice
+    bookkeeping that mutates it stays host-side in :mod:`.lmg`.
+    """
+
+    def __init__(self, cu, cv, cand_delta, cand_phi, *, pallas: bool = False):
+        self._pallas = pallas
+        self._nc = nc = cu.shape[0]
+        self._ncp = ncp = _bucket_rows(max(1, nc))
+        with enable_x64():
+            pad = lambda a, fill, dt: jnp.asarray(
+                np.concatenate([a, np.full(ncp - nc, fill, dt)]).astype(dt)
+            )
+            self._cu = pad(cu, 0, np.int64)
+            self._cv = pad(cv, 0, np.int64)
+            self._cdelta = pad(cand_delta, 0.0, np.float64)
+            self._cphi = pad(cand_phi, 0.0, np.float64)
+
+    def score(self, active, cur_delta, d, mass, tin, size, w_total, budget):
+        """Returns ``(i, rho_i, dw_i, dd_i, any_feasible)`` as host scalars;
+        ``i`` indexes the un-padded candidate arrays."""
+        full_active = np.zeros(self._ncp, bool)
+        full_active[: self._nc] = active
+        # bucket the tree-state arrays like everything else, so the jit
+        # cache is shared across same-bucket graph sizes
+        nvp = _bucket_rows(d.shape[0])
+
+        def padv(a, dt):
+            out = np.zeros(nvp, dt)
+            out[: a.shape[0]] = a
+            return jnp.asarray(out)
+
+        with enable_x64():
+            i, rho, dw, dd, any_ok = _lmg_score_jit(
+                self._cu, self._cv, self._cdelta, self._cphi,
+                jnp.asarray(full_active),
+                padv(cur_delta, np.float64), padv(d, np.float64),
+                padv(mass, np.float64), padv(tin, np.int64),
+                padv(size, np.int64),
+                jnp.float64(w_total), jnp.float64(budget), self._pallas,
+            )
+            return int(i), float(rho), float(dw), float(dd), bool(any_ok)

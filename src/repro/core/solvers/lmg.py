@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..version_graph import StorageSolution, VersionGraph
+from . import CONSTRAINT_TOL
 from .mst import minimum_storage_tree
 from .spt import shortest_path_tree
 
@@ -62,15 +63,22 @@ def local_move_greedy(
     weights: Optional[Dict[int, float]] = None,
     base: Optional[StorageSolution] = None,
     spt: Optional[StorageSolution] = None,
+    backend: str = "numpy",
+    pallas: bool = False,
 ) -> StorageSolution:
     """Problem 3: min Σ_i R_i subject to C ≤ budget.
 
     ``weights`` enables the workload-aware variant: the objective becomes
     Σ_i w_i · R_i (Fig. 16 experiment).  ``base``/``spt`` may be passed to
     reuse precomputed trees (the benchmark sweeps budgets over one instance).
+    ``backend="jax"`` scores every round's candidate set ξ on device
+    (:class:`repro.core.solvers.jax_backend.LmgScorer`, bit-identical); the
+    subtree-splice bookkeeping below is shared by both backends.
     """
-    base = base or minimum_storage_tree(g)
-    spt = spt or shortest_path_tree(g)
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown solver backend {backend!r}")
+    base = base or minimum_storage_tree(g, backend=backend, pallas=pallas)
+    spt = spt or shortest_path_tree(g, backend=backend, pallas=pallas)
     ea = g.arrays()
     n = g.n
 
@@ -89,7 +97,7 @@ def local_move_greedy(
     w_total = 0.0
     for x in cur_delta[1:].tolist():
         w_total += x
-    if w_total > budget + 1e-9:
+    if w_total > budget + CONSTRAINT_TOL:
         raise ValueError(
             f"budget {budget} below minimum storage {w_total}: infeasible"
         )
@@ -137,26 +145,39 @@ def local_move_greedy(
     cand_phi = ea.phi[ceid] if ceid.shape[0] else np.empty(0)
     active = np.ones(cu.shape[0], dtype=bool)
 
+    scorer = None
+    if backend == "jax" and cu.shape[0]:
+        from .jax_backend import LmgScorer
+
+        scorer = LmgScorer(cu, cv, cand_delta, cand_phi, pallas=pallas)
+
     while active.any():
-        dw = cand_delta - cur_delta[cv]
-        ok = active & (w_total + dw <= budget + 1e-9)
-        dd = (d[cu] + cand_phi) - d[cv]
-        reduction = -dd * mass[cv]
-        ok &= reduction > 0
-        # cycle test: u inside subtree(v) ⇔ tin[v] ≤ tin[u] < tin[v]+size[v];
-        # the root is never excluded (tin[0] == 0 < tin[v] for any v ≥ 1)
-        ok &= ~((tin[cv] <= tin[cu]) & (tin[cu] < tin[cv] + size[cv]))
-        if not ok.any():
-            break
-        rho = np.full(cu.shape[0], -1.0, dtype=np.float64)
-        pos = ok & (dw > 0)
-        rho[pos] = reduction[pos] / dw[pos]
-        rho[ok & (dw <= 0)] = np.inf
-        i = int(np.argmax(rho))
-        if rho[i] <= 0.0:
-            break
+        if scorer is not None:
+            i, rho_i, dwi, ddi, any_ok = scorer.score(
+                active, cur_delta, d, mass, tin, size, w_total, budget
+            )
+            if not any_ok or rho_i <= 0.0:
+                break
+        else:
+            dw = cand_delta - cur_delta[cv]
+            ok = active & (w_total + dw <= budget + CONSTRAINT_TOL)
+            dd = (d[cu] + cand_phi) - d[cv]
+            reduction = -dd * mass[cv]
+            ok &= reduction > 0
+            # cycle test: u inside subtree(v) ⇔ tin[v] ≤ tin[u] < tin[v]+size[v];
+            # the root is never excluded (tin[0] == 0 < tin[v] for any v ≥ 1)
+            ok &= ~((tin[cv] <= tin[cu]) & (tin[cu] < tin[cv] + size[cv]))
+            if not ok.any():
+                break
+            rho = np.full(cu.shape[0], -1.0, dtype=np.float64)
+            pos = ok & (dw > 0)
+            rho[pos] = reduction[pos] / dw[pos]
+            rho[ok & (dw <= 0)] = np.inf
+            i = int(np.argmax(rho))
+            if rho[i] <= 0.0:
+                break
+            dwi, ddi = float(dw[i]), float(dd[i])
         u, v = int(cu[i]), int(cv[i])
-        dwi, ddi = float(dw[i]), float(dd[i])
         old_u = int(parent[v])
         # rewire
         parent[v] = u
@@ -211,12 +232,14 @@ def minimize_storage_sum_recreation(
     weights: Optional[Dict[int, float]] = None,
     tol: float = 1e-3,
     max_iters: int = 48,
+    backend: str = "numpy",
+    pallas: bool = False,
 ) -> StorageSolution:
     """Problem 5: min C subject to Σ_i R_i ≤ theta, by binary search on the
     budget passed to LMG (paper §4.1: "repeated iterations and binary search").
     """
-    base = minimum_storage_tree(g)
-    spt = shortest_path_tree(g)
+    base = minimum_storage_tree(g, backend=backend, pallas=pallas)
+    spt = shortest_path_tree(g, backend=backend, pallas=pallas)
     lo = base.storage_cost()
     hi = spt.storage_cost()
     if spt.sum_recreation(weights) > theta + 1e-9:
@@ -226,7 +249,8 @@ def minimize_storage_sum_recreation(
     best = None
     for _ in range(max_iters):
         mid = 0.5 * (lo + hi)
-        sol = local_move_greedy(g, mid, weights=weights, base=base, spt=spt)
+        sol = local_move_greedy(g, mid, weights=weights, base=base, spt=spt,
+                                backend=backend, pallas=pallas)
         if sol.sum_recreation(weights) <= theta:
             best, hi = sol, mid
         else:

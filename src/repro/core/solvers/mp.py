@@ -26,6 +26,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from ..version_graph import StorageSolution, VersionGraph
+from . import CONSTRAINT_TOL, EPS
 from .mst import minimum_storage_tree
 from .spt import dijkstra
 
@@ -47,8 +48,38 @@ def _is_ancestor(p: np.ndarray, anc: int, node: int) -> bool:
     return False
 
 
-def modified_prim(g: VersionGraph, theta: float) -> StorageSolution:
-    """Problem 6: min total storage subject to max_i R_i ≤ theta."""
+def modified_prim(
+    g: VersionGraph, theta: float, *, backend: str = "numpy",
+    pallas: bool = False,
+) -> StorageSolution:
+    """Problem 6: min total storage subject to max_i R_i ≤ theta.
+
+    ``backend="jax"`` runs the main loop as one jitted scan
+    (:func:`repro.core.solvers.jax_backend.modified_prim_core`,
+    bit-identical); the rare unreached-version SPT splice below is shared by
+    both backends.
+    """
+    if backend == "jax":
+        from . import jax_backend
+
+        l, d, p, in_tree = jax_backend.modified_prim_core(
+            g.arrays(), theta, pallas=pallas
+        )
+    elif backend == "numpy":
+        l, d, p, in_tree = _mp_core_numpy(g, theta)
+    else:
+        raise ValueError(f"unknown solver backend {backend!r}")
+    missing = [i for i in g.versions() if not in_tree[i]]
+    if missing:
+        _splice_spt_paths(g, theta, missing, d, l, p, in_tree)
+    sol = StorageSolution(
+        parent={i: int(p[i]) for i in g.versions()}, graph=g
+    )
+    return sol
+
+
+def _mp_core_numpy(g: VersionGraph, theta: float):
+    """The heap-driven MP main loop; returns ``(l, d, p, in_tree)``."""
     ea = g.arrays()
     nv = g.n + 1
     l = np.full(nv, np.inf, dtype=np.float64)
@@ -59,7 +90,7 @@ def modified_prim(g: VersionGraph, theta: float) -> StorageSolution:
     pq = [(0.0, 0)]
     while pq:
         li, vi = heapq.heappop(pq)
-        if in_tree[vi] or li > l[vi] + 1e-15:
+        if in_tree[vi] or li > l[vi] + EPS:
             continue  # stale entry
         in_tree[vi] = True
         s, e = ea.out_range(vi)
@@ -77,14 +108,14 @@ def modified_prim(g: VersionGraph, theta: float) -> StorageSolution:
                 vj = int(vs[k])
                 cphi = float(phs[k])
                 cdel = float(dts[k])
-                if cphi + dvi <= d[vj] + 1e-15 and cdel <= l[vj] - 1e-15:
+                if cphi + dvi <= d[vj] + EPS and cdel <= l[vj] - EPS:
                     if _is_ancestor(p, vj, vi):
                         continue  # re-parenting under a descendant would cycle
                     p[vj] = vi
                     d[vj] = cphi + dvi
                     l[vj] = cdel
         # standard frontier relaxation under the θ constraint — one masked op
-        imp = ~it & (phs + d[vi] <= theta + 1e-9) & (dts < l[vs] - 1e-15)
+        imp = ~it & (phs + d[vi] <= theta + CONSTRAINT_TOL) & (dts < l[vs] - EPS)
         if imp.any():
             vj = vs[imp]
             d[vj] = phs[imp] + d[vi]
@@ -92,40 +123,38 @@ def modified_prim(g: VersionGraph, theta: float) -> StorageSolution:
             p[vj] = vi
             for lv, vv in zip(l[vj].tolist(), vj.tolist()):
                 heapq.heappush(pq, (lv, vv))
-    missing = [i for i in g.versions() if not in_tree[i]]
-    if missing:
-        # The greedy dequeue order (by storage) can strand a version even at a
-        # feasible θ, because d() along the partially-built tree may overshoot
-        # where the SPT path would not.  Problem 6 is feasible iff
-        # θ ≥ max_i SPT(i) (the SPT minimizes every R_i), so splice SPT paths:
-        # each splice sets d to the SPT distance — never an increase for any
-        # already-reached node — hence the θ invariant is preserved.
-        dist, sp_parent = dijkstra(g, weight="phi")
-        bad = [i for i in missing if dist.get(i, float("inf")) > theta + 1e-9]
-        if bad:
-            raise InfeasibleError(
-                f"theta={theta} infeasible: versions {bad[:5]} have SPT "
-                f"recreation above the bound"
-            )
-        for v in missing:
-            # full SPT path root→v, relaxed front to back: the running cost is
-            # ≤ the SPT distance at every node (induction on path prefixes).
-            path = [v]
-            while path[-1] != 0:
-                path.append(sp_parent[path[-1]])
-            path.reverse()
-            for u, x in zip(path, path[1:]):
-                c = g.materialization_cost(x) if u == 0 else g.cost(u, x)
-                cand = float(d[u]) + c.phi
-                if not in_tree[x] or cand < d[x] - 1e-15:
-                    p[x] = u
-                    d[x] = cand
-                    l[x] = c.delta
-                    in_tree[x] = True
-    sol = StorageSolution(
-        parent={i: int(p[i]) for i in g.versions()}, graph=g
-    )
-    return sol
+    return l, d, p, in_tree
+
+
+def _splice_spt_paths(g, theta, missing, d, l, p, in_tree) -> None:
+    # The greedy dequeue order (by storage) can strand a version even at a
+    # feasible θ, because d() along the partially-built tree may overshoot
+    # where the SPT path would not.  Problem 6 is feasible iff
+    # θ ≥ max_i SPT(i) (the SPT minimizes every R_i), so splice SPT paths:
+    # each splice sets d to the SPT distance — never an increase for any
+    # already-reached node — hence the θ invariant is preserved.
+    dist, sp_parent = dijkstra(g, weight="phi")
+    bad = [i for i in missing if dist.get(i, float("inf")) > theta + CONSTRAINT_TOL]
+    if bad:
+        raise InfeasibleError(
+            f"theta={theta} infeasible: versions {bad[:5]} have SPT "
+            f"recreation above the bound"
+        )
+    for v in missing:
+        # full SPT path root→v, relaxed front to back: the running cost is
+        # ≤ the SPT distance at every node (induction on path prefixes).
+        path = [v]
+        while path[-1] != 0:
+            path.append(sp_parent[path[-1]])
+        path.reverse()
+        for u, x in zip(path, path[1:]):
+            c = g.materialization_cost(x) if u == 0 else g.cost(u, x)
+            cand = float(d[u]) + c.phi
+            if not in_tree[x] or cand < d[x] - EPS:
+                p[x] = u
+                d[x] = cand
+                l[x] = c.delta
+                in_tree[x] = True
 
 
 def min_max_recreation_under_budget(
@@ -134,20 +163,23 @@ def min_max_recreation_under_budget(
     *,
     tol: float = 1e-3,
     max_iters: int = 48,
+    backend: str = "numpy",
+    pallas: bool = False,
 ) -> StorageSolution:
     """Problem 4: min max_i R_i subject to C ≤ budget — bisection on θ fed to
     `modified_prim` (the paper notes "the solution for Problem 4 is similar").
     """
     dist, _ = dijkstra(g, weight="phi")
     lo = max(dist[i] for i in g.versions())  # SPT bound: best achievable max R
-    base = minimum_storage_tree(g)
+    base = minimum_storage_tree(g, backend=backend, pallas=pallas)
     if base.storage_cost() > budget + 1e-9:
         raise InfeasibleError("budget below minimum storage cost")
     hi = base.max_recreation()
     best: Optional[StorageSolution] = None
     # check the ideal point first
     try:
-        sol = modified_prim(g, lo * (1 + 1e-12))
+        sol = modified_prim(g, lo * (1 + 1e-12), backend=backend,
+                            pallas=pallas)
         if sol.storage_cost() <= budget + 1e-9:
             return sol
     except InfeasibleError:
@@ -155,7 +187,7 @@ def min_max_recreation_under_budget(
     for _ in range(max_iters):
         mid = 0.5 * (lo + hi)
         try:
-            sol = modified_prim(g, mid)
+            sol = modified_prim(g, mid, backend=backend, pallas=pallas)
             feasible = sol.storage_cost() <= budget + 1e-9
         except InfeasibleError:
             feasible = False

@@ -11,6 +11,12 @@
 
 Weights are the ``Δ`` components (storage bytes).  Tests cross-check the MCA
 against the dict-based seed implementation on random instances.
+
+``backend="jax"`` runs the undirected case as one jitted Prim loop
+(:func:`repro.core.solvers.jax_backend.prim`, bit-identical).  Directed
+instances always use the host Edmonds — cycle contraction is pointer-chasing
+with data-dependent shapes, unsuited to jitting (ROADMAP tracks the
+mergeable-heap rewrite instead).
 """
 
 from __future__ import annotations
@@ -24,16 +30,32 @@ from ..edge_arrays import EdgeArrays
 from ..version_graph import StorageSolution, VersionGraph
 
 
-def minimum_storage_tree(g: VersionGraph) -> StorageSolution:
+def minimum_storage_tree(
+    g: VersionGraph, *, backend: str = "numpy", pallas: bool = False
+) -> StorageSolution:
     """Solve Problem 1: min total storage, any finite recreation."""
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown solver backend {backend!r}")
     if g.directed:
         parent = _edmonds_mca(g)
+    elif backend == "jax":
+        parent = _prim_jax(g, pallas=pallas)
     else:
         parent = _prim(g)
     return StorageSolution(parent=parent, graph=g)
 
 
 # ------------------------------------------------------------------- Prim MST
+def _prim_jax(g: VersionGraph, *, pallas: bool = False) -> Dict[int, int]:
+    from . import jax_backend
+
+    bp = jax_backend.prim(g.arrays(), pallas=pallas)
+    missing = [i for i in g.versions() if bp[i] < 0]
+    if missing:
+        raise ValueError(f"graph disconnected; unreachable: {missing[:8]}")
+    return {i: int(bp[i]) for i in g.versions()}
+
+
 def _prim(g: VersionGraph) -> Dict[int, int]:
     ea = g.arrays()
     nv = ea.n + 1

@@ -8,6 +8,10 @@ The relaxation runs on the flat :class:`~repro.core.edge_arrays.EdgeArrays`
 view: popping a vertex relaxes its whole CSR out-row with one masked array
 op, pushing only the improved frontier entries onto the binary heap — the
 per-edge Python loop of the dict-based implementation is gone.
+
+``backend="jax"`` replaces the Python-heap loop with the jitted whole-graph
+Bellman-Ford relaxation of :mod:`.jax_backend` (bit-identical output; see
+that module for the equivalence argument).
 """
 
 from __future__ import annotations
@@ -19,12 +23,22 @@ import numpy as np
 
 from ..edge_arrays import EdgeArrays
 from ..version_graph import StorageSolution, VersionGraph
+from . import EPS
 
 
 def shortest_path_tree(
-    g: VersionGraph, *, weight: str = "phi"
+    g: VersionGraph, *, weight: str = "phi", backend: str = "numpy",
+    pallas: bool = False,
 ) -> StorageSolution:
-    dist, parent = dijkstra_arrays(g.arrays(), weight=weight)
+    if backend == "jax":
+        from . import jax_backend
+
+        dist, parent = jax_backend.sssp(g.arrays(), weight=weight,
+                                        pallas=pallas)
+    elif backend == "numpy":
+        dist, parent = dijkstra_arrays(g.arrays(), weight=weight)
+    else:
+        raise ValueError(f"unknown solver backend {backend!r}")
     missing = [i for i in g.versions() if parent[i] < 0]
     if missing:
         raise ValueError(f"versions unreachable from root: {missing[:8]}")
@@ -59,7 +73,7 @@ def dijkstra_arrays(
             continue
         vs = ea.dst[s:e]
         nd = d + w[s:e]
-        imp = ~done[vs] & (nd < dist[vs] - 1e-15)
+        imp = ~done[vs] & (nd < dist[vs] - EPS)
         if imp.any():
             vi = vs[imp]
             ndi = nd[imp]

@@ -121,6 +121,10 @@ def _compact(mask: jnp.ndarray, new_blocks: jnp.ndarray, capacity: int):
     idx = idx.at[slots].set(jnp.arange(nb, dtype=jnp.int32), mode="drop")
     idx = jnp.where(idx >= 0, idx, pad_row)
     gathered = new_blocks[idx]
+    # NB the returned count is the *true* number of changed rows: when it
+    # exceeds ``capacity`` the drop-mode scatter above has discarded the
+    # overflow and the packed delta is incomplete — callers must check
+    # (sparse_encode raises host-side; fully-traced callers branch on it).
     return idx, gathered, jnp.sum(m)
 
 
@@ -130,15 +134,27 @@ def sparse_encode(
     """Return (idx, packed_blocks, n_changed) for the block-sparse delta.
 
     With ``capacity=None`` the exact changed count is materialized host-side
-    (store/commit path, off the step-critical path); pass an explicit capacity
-    for fully-traced use.
+    (store/commit path, off the step-critical path) and capacity grows to
+    fit.  An explicit ``capacity`` keeps jit recompiles bounded, but must
+    cover the changed count: an undersized capacity would silently drop
+    changed blocks in ``_compact`` (producing a delta that ``sparse_apply``
+    cannot detect as corrupt), so this host-side wrapper raises instead.
+    Fully-traced callers should use ``_compact`` directly and branch on the
+    returned count.
     """
     mask = changed_block_mask(base_blocks, new_blocks, interpret=INTERPRET)
     if capacity is None:
         n_changed = int(jnp.sum(mask[:, 0]))
         capacity = _round_capacity(max(1, n_changed))
     idx, blocks, n = _compact(mask, new_blocks, capacity)
-    return idx, blocks, int(n)
+    n = int(n)
+    if n > capacity:
+        raise ValueError(
+            f"sparse_encode capacity overflow: {n} changed blocks exceed "
+            f"capacity={capacity}; pass capacity>={_round_capacity(n)} (or "
+            f"capacity=None to size automatically)"
+        )
+    return idx, blocks, n
 
 
 def sparse_apply(

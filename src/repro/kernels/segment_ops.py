@@ -1,0 +1,123 @@
+"""Pallas kernels: segment-min / segment-argmin over padded CSR rows.
+
+The jitted solver backend (:mod:`repro.core.solvers.jax_backend`) reshapes
+the version graph's CSR rows into a dense ``(rows, width)`` matrix padded
+with ``+inf`` — in-edges per vertex for the SSSP relaxation, flat candidate
+vectors for the LMG scoring round.  The reductions over that layout are the
+solver inner loops, and they compile to single-pass VMEM row reductions:
+
+* :func:`segment_min_rows`    — per-row minimum (the Bellman-Ford relaxation);
+* :func:`segment_argmin_rows` — per-row first-minimum index (parent/candidate
+  selection; first occurrence matches NumPy tie-breaking);
+* :func:`min_argmin_1d`       — global ``(min, argmin)`` of a flat vector via
+  the row kernels (vertex selection in Prim/MP, ρ-argmax in LMG).
+
+Each wrapper takes ``use_pallas``: ``True`` routes through the Pallas kernels
+(``interpret=True`` on this CPU container, matching the idiom of
+``kernels/ops.py``; flipped to compiled mode on real TPU backends), ``False``
+lowers the same reduction through plain XLA ops — the fast path on CPU, where
+the Pallas interpreter adds per-call overhead.  Both paths are bit-identical:
+the reductions are order-insensitive min/first-argmin over the same floats.
+
+NOTE: solver costs are float64; the interpreter handles that everywhere, but
+real TPU lowering would need a float32 (or split hi/lo) variant.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS_PER_PROGRAM = 256
+LANE = 128  # pad the minor dim to the TPU lane width
+
+INTERPRET = True  # flipped to False on real TPU backends
+
+
+def _min_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.min(x_ref[...], axis=1)[:, None]
+
+
+def _argmin_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.argmin(x_ref[...], axis=1)[:, None].astype(jnp.int32)
+
+
+def _row_call(kernel, x: jnp.ndarray, out_dtype, *, rows_per_program: int,
+              interpret: bool) -> jnp.ndarray:
+    nr, nc = x.shape
+    rows = min(rows_per_program, nr)
+    grid = (pl.cdiv(nr, rows),)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, nc), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, 1), out_dtype),
+        interpret=interpret,
+    )(x)[:, 0]
+
+
+def segment_min_rows(
+    x: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    rows_per_program: int = DEFAULT_ROWS_PER_PROGRAM,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-row minimum of a padded ``(rows, width)`` segment matrix."""
+    if not use_pallas:
+        return jnp.min(x, axis=1)
+    interpret = INTERPRET if interpret is None else interpret
+    return _row_call(_min_kernel, x, x.dtype,
+                     rows_per_program=rows_per_program, interpret=interpret)
+
+
+def segment_argmin_rows(
+    x: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    rows_per_program: int = DEFAULT_ROWS_PER_PROGRAM,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-row index of the first minimum (NumPy ``argmin`` tie-breaking)."""
+    if not use_pallas:
+        return jnp.argmin(x, axis=1).astype(jnp.int32)
+    interpret = INTERPRET if interpret is None else interpret
+    return _row_call(_argmin_kernel, x, jnp.int32,
+                     rows_per_program=rows_per_program, interpret=interpret)
+
+
+def pad_to_rows(x: jnp.ndarray, fill) -> jnp.ndarray:
+    """Reshape a flat vector to ``(rows, LANE)``, padding the tail with
+    ``fill`` — the layout the row kernels reduce over."""
+    n = x.shape[0]
+    pad = (-n) % LANE
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    return x.reshape(-1, LANE)
+
+
+def min_argmin_1d(
+    x: jnp.ndarray, *, use_pallas: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Global ``(min, first argmin)`` of a flat float vector.
+
+    Two-stage: per-row kernel reduction, then a (tiny) reduction over row
+    minima.  First-occurrence semantics survive both stages — the first row
+    attaining the global min is picked, then the first column within it.
+    """
+    if not use_pallas:
+        i = jnp.argmin(x)
+        return x[i], i.astype(jnp.int64)
+    x2 = pad_to_rows(x, jnp.inf)
+    row_min = segment_min_rows(x2, use_pallas=True)
+    r = jnp.argmin(row_min)
+    # argmin only the winning row — a full per-row argmin pass would double
+    # the kernel work for a single consumed lane
+    col = segment_argmin_rows(x2[r][None, :], use_pallas=True)[0]
+    i = r.astype(jnp.int64) * LANE + col.astype(jnp.int64)
+    return row_min[r], jnp.minimum(i, x.shape[0] - 1)

@@ -48,6 +48,7 @@ class ServeEngine:
         self.batch = batch
         self.temperature = temperature
         self.eos_id = eos_id
+        self.enc_len = enc_len
         kw = {"enc_len": enc_len} if self.cfg.is_encdec else {}
         self._cache0 = bundle.init_cache(batch, max_len, **kw)
         self._prefill = jax.jit(bundle.prefill, donate_argnums=(2,))
@@ -94,9 +95,12 @@ class ServeEngine:
                 if done.all():
                     break
         decode_s = time.monotonic() - t0
+        # re-init with the *constructor* enc_len: a different encoder length
+        # here would change cache shapes and silently retrigger XLA
+        # compilation (or truncate/overrun the encoder) on the next generate
         self._cache0 = self.bundle.init_cache(
             self.batch, self.max_len,
-            **({"enc_len": self.max_len} if self.cfg.is_encdec else {}),
+            **({"enc_len": self.enc_len} if self.cfg.is_encdec else {}),
         )
         return GenerationResult(
             tokens=np.concatenate(out, axis=1),

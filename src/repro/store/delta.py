@@ -63,8 +63,14 @@ def _arr_from_wire(d: Dict) -> np.ndarray:
 
 
 def encode_full(flat: FlatTree) -> bytes:
+    # sorted-key serialization: the content fingerprint (sha256 of these
+    # bytes) must not depend on dict insertion order, which differs between
+    # the commit path (tree_flatten order) and checkout-re-encode
+    # (apply_delta rebuild order) — an order-dependent fp would spuriously
+    # invalidate the incremental Δ/Φ edge cache
     return msgpack.packb(
-        {"kind": "full", "leaves": {k: _arr_to_wire(v) for k, v in flat.items()}},
+        {"kind": "full",
+         "leaves": {k: _arr_to_wire(flat[k]) for k in sorted(flat)}},
         use_bin_type=True,
     )
 
@@ -109,9 +115,10 @@ def encode_delta(base: FlatTree, new: FlatTree) -> Tuple[bytes, Dict]:
 def apply_delta(base: FlatTree, payload: bytes) -> FlatTree:
     obj = msgpack.unpackb(payload, raw=False)
     assert obj["kind"] == "delta", obj["kind"]
+    tombstones = set(obj["tombstones"])  # O(1) lookup per leaf, not O(T)
     out: FlatTree = {}
     for key, arr in base.items():
-        if key in obj["tombstones"]:
+        if key in tombstones:
             continue
         d = obj["sparse"].get(key)
         if d is None:

@@ -306,6 +306,12 @@ class VersionStore:
     ) -> Dict[str, float]:
         """Re-optimize the storage graph with one of the paper's solvers and
         rewrite physical storage to match.  Returns before/after stats."""
+        if not self.versions:
+            # nothing to repack: solvers need ≥1 version and the stats below
+            # take max() over the version set
+            zero = {"storage_bytes": 0, "sum_recreation_s": 0.0,
+                    "max_recreation_s": 0.0}
+            return {"before": dict(zero), "after": dict(zero)}
         before = {
             "storage_bytes": self.storage_bytes(),
             "sum_recreation_s": sum(self.recreation_cost(v) for v in self.versions),

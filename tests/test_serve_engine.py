@@ -1,0 +1,68 @@
+"""ServeEngine regression tests.
+
+The enc-dec cache-shape bug: ``generate()`` used to re-initialize the
+enc-dec cache with ``enc_len=self.max_len`` instead of the ``enc_len`` the
+engine was constructed with, so the *second* generate on an encoder-decoder
+model ran against a cache of different shapes — silently retriggering XLA
+compilation and decoding against a wrong-length encoder output.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import get_model
+from repro.serving.engine import ServeEngine
+
+B, ENC_LEN, PROMPT, MAX_LEN = 2, 8, 4, 16
+
+
+@pytest.fixture(scope="module")
+def encdec_engine():
+    cfg = ARCHS["seamless-m4t-medium"].reduced()
+    assert cfg.is_encdec
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(
+        model, params, max_len=MAX_LEN, batch=B, enc_len=ENC_LEN
+    )
+    return cfg, engine
+
+
+def _batch(cfg, rng):
+    import jax.numpy as jnp
+
+    return {
+        "frames": jnp.asarray(
+            rng.randn(B, ENC_LEN, cfg.d_model), jnp.bfloat16
+        ),
+        "tokens": jnp.asarray(
+            rng.randint(0, cfg.vocab, (B, PROMPT)), jnp.int32
+        ),
+    }
+
+
+def _shapes(tree):
+    return jax.tree.map(lambda a: tuple(a.shape), tree)
+
+
+class TestEncDecCacheShapes:
+    def test_cache_shapes_stable_across_generates(self, encdec_engine):
+        cfg, engine = encdec_engine
+        before = _shapes(engine._cache0)
+        res = engine.generate(_batch(cfg, np.random.RandomState(0)),
+                              max_new_tokens=3)
+        assert res.tokens.shape == (B, 3)
+        after = _shapes(engine._cache0)
+        assert before == after, (
+            "generate() rebuilt the enc-dec cache with different shapes — "
+            "enc_len drifted from the constructor value"
+        )
+
+    def test_second_generate_works(self, encdec_engine):
+        cfg, engine = encdec_engine
+        res = engine.generate(_batch(cfg, np.random.RandomState(1)),
+                              max_new_tokens=2)
+        assert res.tokens.shape == (B, 2)
+        assert np.all(res.tokens >= 0)

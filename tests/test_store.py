@@ -203,6 +203,38 @@ class TestVersionStore:
         live = {m.object_key for m in store.log()}
         assert set(store.objects.keys()) == live
 
+    def test_repack_empty_store(self, tmp_path):
+        # regression: used to crash on max() over the empty version set
+        store = VersionStore(tmp_path)
+        stats = store.repack("spt")
+        zero = {"storage_bytes": 0, "sum_recreation_s": 0.0,
+                "max_recreation_s": 0.0}
+        assert stats == {"before": zero, "after": zero}
+        assert store.versions == {}
+
+    def test_content_fp_stable_across_checkout_reencode(self, tmp_path):
+        # regression: encode_full serialized leaves in dict insertion order,
+        # so a checkout (base-order + appended full leaves) re-encoded to
+        # different bytes than the commit path and the fp-keyed Δ/Φ edge
+        # cache was spuriously invalidated
+        import hashlib
+
+        store = VersionStore(tmp_path)
+        rng = np.random.RandomState(0)
+        p1 = make_payload(rng)
+        v1 = store.commit(p1, message="v1")
+        # v2 must be stored as a *delta* (checkout then rebuilds the tree in
+        # apply_delta order): small perturbation + one added leaf whose key
+        # sorts before the base keys
+        p2 = perturb(p1, rng, frac=0.03)
+        p2["aa_added"] = rng.randn(16).astype(np.float32)
+        v2 = store.commit(p2, parents=[v1], message="v2")
+        assert store.versions[v2].stored_base == v1
+        for v in (v1, v2):
+            flat = store.checkout(v)
+            refp = hashlib.sha256(encode_full(flat)).hexdigest()
+            assert refp == store.versions[v].content_fp
+
 
 class TestVersionedCheckpointing:
     def _state(self, rng):
