@@ -18,11 +18,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import paper_figures as pf
+    from . import serving_checkout as sc
     from . import solver_scale as ss
     from . import system_benches as sb
 
     suites = [
         ("solver_scale", ss.solver_scale),
+        ("serving_checkout", sc.serving_checkout),
         ("fig13", pf.fig13_tradeoff_directed),
         ("fig14", pf.fig14_maxrec_directed),
         ("fig15", pf.fig15_undirected),

@@ -161,6 +161,9 @@ class VersionedCheckpointManager:
     def close(self):
         self.wait()
         self._pool.shutdown(wait=True)
+        # persist access counts accumulated by restores, so a later
+        # repack(use_access_frequencies=True) sees the real workload
+        self.store.close()
 
 
 def restore_to_template(flat: FlatTree, template: Any, shardings: Any = None) -> Any:

@@ -9,6 +9,12 @@ from .delta import (
     encode_full,
     flatten_payload,
 )
+from .materializer import (
+    CheckoutPlan,
+    CheckoutPlanner,
+    MaterializationCache,
+    Materializer,
+)
 from .objectstore import Codec, ObjectStore
 from .version_store import VersionMeta, VersionStore
 
@@ -17,6 +23,10 @@ __all__ = [
     "ObjectStore",
     "VersionStore",
     "VersionMeta",
+    "Materializer",
+    "MaterializationCache",
+    "CheckoutPlanner",
+    "CheckoutPlan",
     "RecreationCostModel",
     "flatten_payload",
     "encode_full",

@@ -1,0 +1,362 @@
+"""Materialization subsystem: planned, cached, batched checkouts.
+
+The paper's whole premise is that recreation cost Φ is paid at *checkout*
+time; this module is the layer that actually pays it well.  Every checkout in
+the codebase routes through a :class:`Materializer`, which composes three
+parts:
+
+* :class:`CheckoutPlanner` — turns one or many requested version ids into an
+  explicit :class:`CheckoutPlan` over the storage graph.  A batch is
+  topologically ordered (bases before dependents) with shared chain prefixes
+  deduplicated, so ``checkout_many([v1..vk])`` decodes each intermediate
+  FlatTree exactly once while staying bit-identical to k independent
+  checkouts.  The walk is bounded, so corrupted ``stored_base`` metadata
+  raises instead of looping.
+
+* :class:`MaterializationCache` — a byte-budgeted LRU of materialized
+  FlatTrees keyed by ``(vid, storage-graph fingerprint)``.  The fingerprint
+  hashes every ``(vid, stored_base, object_key)`` triple, so any commit or
+  repack changes it and stale entries can never be served; the cache drops
+  everything the moment it sees a new fingerprint.  Cached arrays are marked
+  read-only — a caller mutating a checkout result in place would otherwise
+  silently corrupt every future checkout of that version.
+
+* :class:`Materializer` — executes plans against the :class:`ObjectStore`,
+  feeding every decoded tree (intermediates included — they are exactly the
+  hot chain prefixes) through the cache, and exposes hit/decode statistics
+  plus ``prefetch`` for repack-time cache warming.
+
+The cache budget is the ``cache_budget_bytes`` knob on
+:class:`~repro.store.version_store.VersionStore` (default 256 MiB; 0 disables
+caching but keeps within-batch prefix sharing).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+from typing import (
+    TYPE_CHECKING,
+    Any,
+    Dict,
+    Iterable,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
+
+from .delta import FlatTree, apply_delta, decode_full
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (store owns us)
+    from .version_store import VersionStore
+
+
+def tree_nbytes(flat: FlatTree) -> int:
+    """Resident bytes of a materialized tree (what the cache budget counts).
+
+    Charges every leaf in full even though ``apply_delta`` shares unchanged
+    leaves by reference between chain-adjacent trees — the budget over-, not
+    under-estimates resident memory, so eviction errs toward too early.
+    """
+    return sum(a.nbytes for a in flat.values())
+
+
+def _freeze(flat: FlatTree) -> FlatTree:
+    """Mark every leaf read-only.  Materialized trees alias arrays — across
+    the cache, and across batch results via ``apply_delta``'s unchanged-leaf
+    passthrough — so an in-place write to one checkout result would silently
+    corrupt others; numpy turns that into a ValueError instead."""
+    for arr in flat.values():
+        arr.flags.writeable = False
+    return flat
+
+
+def storage_fingerprint(versions: Dict[int, Any]) -> str:
+    """Hash of the whole storage graph: every (vid, stored_base, object_key).
+
+    Any commit, repack, or metadata edit changes at least one triple, so a
+    cache keyed by this fingerprint can never serve a stale tree.
+    """
+    h = hashlib.sha256()
+    for vid in sorted(versions):
+        meta = versions[vid]
+        h.update(
+            f"{vid}:{meta.stored_base}:{meta.object_key};".encode()
+        )
+    return h.hexdigest()
+
+
+# ------------------------------------------------------------------- planner
+@dataclasses.dataclass(frozen=True)
+class CheckoutStep:
+    """One decode in a plan: full decode (base None) or delta apply."""
+
+    vid: int
+    base: Optional[int]
+    object_key: str
+
+
+@dataclasses.dataclass
+class CheckoutPlan:
+    """Topologically ordered decode schedule for a batch of checkouts.
+
+    ``steps`` lists every decode needed, bases strictly before dependents,
+    each vid at most once — shared chain prefixes across the batch appear a
+    single time.  ``from_cache`` are vids (requested or chain bases) the
+    planner found already materialized; they need no decoding at all.
+    """
+
+    requested: List[int]
+    steps: List[CheckoutStep]
+    from_cache: List[int]
+
+    @property
+    def decode_count(self) -> int:
+        return len(self.steps)
+
+
+class CheckoutPlanner:
+    """Plans checkouts over the storage graph (a forest: ≤1 base per vid)."""
+
+    def __init__(self, store: "VersionStore") -> None:
+        self._store = store
+
+    def plan(
+        self, vids: Sequence[int], *, cached: Iterable[int] = ()
+    ) -> CheckoutPlan:
+        """Plan a batch checkout of ``vids``.
+
+        ``cached`` names vids whose trees are already materialized; chains
+        are walked only down to the nearest cached vid (or a full object).
+        The walk is bounded by the version count, so a ``stored_base`` cycle
+        in corrupted metadata raises ``RuntimeError`` instead of hanging.
+        """
+        versions = self._store.versions
+        cached_set = set(cached)
+        needed: Dict[int, CheckoutStep] = {}
+        from_cache: List[int] = []
+        order: List[int] = []  # needed vids, deepest-base-first per chain
+
+        for vid in vids:
+            if vid not in versions:
+                raise KeyError(f"unknown version id {vid}")
+            chain: List[int] = []
+            v: Optional[int] = vid
+            while v is not None and v not in needed and v not in cached_set:
+                meta = versions[v]
+                chain.append(v)
+                v = meta.stored_base
+                if len(chain) > len(versions):
+                    raise RuntimeError("storage graph cycle")
+            if v is not None and v in cached_set and v not in from_cache:
+                from_cache.append(v)
+            for v in reversed(chain):
+                meta = versions[v]
+                needed[v] = CheckoutStep(
+                    vid=v, base=meta.stored_base, object_key=meta.object_key
+                )
+                order.append(v)
+
+        return CheckoutPlan(
+            requested=list(vids),
+            steps=[needed[v] for v in order],
+            from_cache=from_cache,
+        )
+
+
+# --------------------------------------------------------------------- cache
+class MaterializationCache:
+    """Byte-budgeted LRU of FlatTrees keyed by (vid, storage fingerprint).
+
+    One fingerprint is live at a time: the first operation under a new
+    fingerprint drops every entry from the old storage graph, so a repack or
+    commit can never leak a stale tree into a checkout.  Entries are evicted
+    least-recently-used once resident bytes exceed ``budget_bytes``; a tree
+    larger than the whole budget is simply not cached.
+    """
+
+    def __init__(self, budget_bytes: int) -> None:
+        self.budget_bytes = int(budget_bytes)
+        self._fp: Optional[str] = None
+        self._entries: "collections.OrderedDict[int, Tuple[FlatTree, int]]" = (
+            collections.OrderedDict()
+        )
+        self.current_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    # -- fingerprint handling ------------------------------------------------
+    def ensure_fingerprint(self, fp: str) -> None:
+        """Adopt ``fp`` as the live storage graph, clearing stale entries."""
+        if fp != self._fp:
+            if self._entries:
+                self.invalidations += 1
+            self._entries.clear()
+            self.current_bytes = 0
+            self._fp = fp
+
+    # -- lookup / insert -----------------------------------------------------
+    def vids(self) -> Iterable[int]:
+        return self._entries.keys()
+
+    def __contains__(self, vid: int) -> bool:
+        return vid in self._entries
+
+    def get(self, vid: int, *, count: bool = True) -> Optional[FlatTree]:
+        ent = self._entries.get(vid)
+        if ent is None:
+            if count:
+                self.misses += 1
+            return None
+        self._entries.move_to_end(vid)
+        if count:
+            self.hits += 1
+        return ent[0]
+
+    def put(self, vid: int, tree: FlatTree) -> None:
+        if self.budget_bytes <= 0:
+            return
+        nbytes = tree_nbytes(tree)
+        if nbytes > self.budget_bytes:
+            return
+        if vid in self._entries:
+            self.current_bytes -= self._entries.pop(vid)[1]
+        self._entries[vid] = (tree, nbytes)
+        self.current_bytes += nbytes
+        while self.current_bytes > self.budget_bytes:
+            _, (_, old_bytes) = self._entries.popitem(last=False)
+            self.current_bytes -= old_bytes
+            self.evictions += 1
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+            "entries": len(self._entries),
+            "current_bytes": self.current_bytes,
+            "budget_bytes": self.budget_bytes,
+        }
+
+
+# --------------------------------------------------------------- materializer
+class Materializer:
+    """Executes checkout plans against the object store, through the cache."""
+
+    def __init__(self, store: "VersionStore", *, budget_bytes: int) -> None:
+        self._store = store
+        self.planner = CheckoutPlanner(store)
+        self.cache = MaterializationCache(budget_bytes)
+        self.full_decodes = 0
+        self.delta_applies = 0
+
+    # -- public API ----------------------------------------------------------
+    def checkout(self, vid: int) -> FlatTree:
+        """Materialize one version (bit-identical to the raw chain walk)."""
+        return self.checkout_many([vid])[0]
+
+    def checkout_many(self, vids: Sequence[int]) -> List[FlatTree]:
+        """Materialize a batch, decoding each shared chain prefix once.
+
+        Returns one tree per requested vid, in request order, bit-identical
+        to ``[checkout(v) for v in vids]``.  Returned dicts are fresh (safe
+        to add/remove keys) but the arrays are shared with the cache and
+        read-only.
+        """
+        self.cache.ensure_fingerprint(self._store.storage_fingerprint())
+        plan = self.planner.plan(vids, cached=self.cache.vids())
+        trees = self._execute(plan)
+        out: List[FlatTree] = []
+        for vid in plan.requested:
+            tree = trees.get(vid)
+            if tree is None:
+                tree = self.cache.get(vid, count=False)
+                assert tree is not None, f"plan missed vid {vid}"
+            out.append(dict(tree))
+        return out
+
+    def prefetch(self, vids: Sequence[int]) -> int:
+        """Warm the cache with ``vids`` (hottest first); returns trees cached.
+
+        Used after ``repack(use_access_frequencies=True)``: the top-k most
+        accessed versions go straight back into the cache so the first
+        post-repack request for a hot version is already warm.
+        """
+        if self.cache.budget_bytes <= 0:
+            return 0
+        self.cache.ensure_fingerprint(self._store.storage_fingerprint())
+        warmed = 0
+        # reversed: LRU evicts oldest inserts first, so load coldest→hottest
+        for vid in reversed(list(vids)):
+            if vid in self.cache:
+                continue
+            plan = self.planner.plan([vid], cached=self.cache.vids())
+            self._execute(plan)
+            warmed += 1
+        return warmed
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            **self.cache.stats(),
+            "full_decodes": self.full_decodes,
+            "delta_applies": self.delta_applies,
+        }
+
+    # -- plan execution ------------------------------------------------------
+    def _execute(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
+        """Run a plan's decode steps; returns every tree it materialized.
+
+        Within the plan, intermediate trees live in a local dict so prefix
+        sharing works even with a zero cache budget; everything decoded is
+        also offered to the cache (budget permitting) for future requests.
+        """
+        objects = self._store.objects
+        trees: Dict[int, FlatTree] = {}
+        for vid in plan.from_cache:
+            tree = self.cache.get(vid, count=False)
+            if tree is not None:
+                trees[vid] = tree
+        for step in plan.steps:
+            if step.base is None:
+                tree = decode_full(objects.get(step.object_key))
+                self.full_decodes += 1
+            else:
+                base_tree = trees.get(step.base)
+                if base_tree is None:  # base evicted between plan and execute
+                    base_tree = self._materialize_chain(step.base, trees)
+                tree = apply_delta(base_tree, objects.get(step.object_key))
+                self.delta_applies += 1
+            trees[step.vid] = _freeze(tree)
+            self.cache.put(step.vid, tree)
+        # hit/miss accounting per requested vid
+        planned = {s.vid for s in plan.steps}
+        for vid in plan.requested:
+            if vid in planned:
+                self.cache.misses += 1
+            else:
+                self.cache.hits += 1
+        return trees
+
+    def _materialize_chain(
+        self, vid: int, trees: Dict[int, FlatTree]
+    ) -> FlatTree:
+        """Fallback chain walk for a base missing from cache and plan."""
+        plan = self.planner.plan([vid], cached=trees.keys())
+        objects = self._store.objects
+        for step in plan.steps:
+            if step.base is None:
+                tree = decode_full(objects.get(step.object_key))
+                self.full_decodes += 1
+            else:
+                tree = apply_delta(
+                    trees[step.base], objects.get(step.object_key)
+                )
+                self.delta_applies += 1
+            trees[step.vid] = _freeze(tree)
+            self.cache.put(step.vid, tree)
+        return trees[vid]

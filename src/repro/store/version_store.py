@@ -11,6 +11,25 @@ rule; the *global* storage graph is what ``repack`` optimizes offline,
 exactly mirroring Git's commit-then-`git repack` split that the paper
 analyzes (§4.4, Appendix A).
 
+Checkout path (the recreation layer): every checkout routes through the
+:class:`~repro.store.materializer.Materializer` — a ``CheckoutPlanner`` that
+compiles one or many requested vids into a topologically ordered decode plan
+(shared storage-chain prefixes decoded exactly once), executed through a
+byte-budgeted LRU ``MaterializationCache`` of FlatTrees keyed by
+``(vid, storage-graph fingerprint)``.  The fingerprint hashes every
+``(vid, stored_base, object_key)`` triple, so commits and repacks invalidate
+the cache atomically and a stale tree can never be served.  ``checkout``
+serves hot versions from memory; ``checkout_many`` batches k checkouts into
+one plan, bit-identical to k sequential calls but strictly cheaper on
+chain-sharing batches.  The cache budget is the ``cache_budget_bytes``
+constructor knob (default 256 MiB; 0 disables caching while keeping
+within-batch prefix sharing), and ``repack(use_access_frequencies=True)``
+prefetches the hottest versions back into the cache after rewriting storage.
+
+Access counts are the workload signal for frequency-aware repacking; they
+are flushed to the metadata file every ``access_flush_every`` checkouts and
+on ``repack``/``close``, so counts survive a reload.
+
 Incremental Δ/Φ measurement: every measured matrix entry is persisted in the
 msgpack metadata keyed by ``(src, dst)`` together with the content
 fingerprints of both endpoint payloads.  ``build_cost_graph`` only re-measures
@@ -44,12 +63,12 @@ from ..core import (
 from .delta import (
     FlatTree,
     RecreationCostModel,
-    apply_delta,
-    decode_full,
     encode_delta,
     encode_full,
     flatten_payload,
 )
+from .materializer import Materializer
+from .materializer import storage_fingerprint as _storage_graph_fp
 from .objectstore import ObjectStore
 
 
@@ -76,31 +95,35 @@ class _PayloadProvider:
     ``src == 0``, a delta otherwise — materializing checkouts and encodings
     on first use only.  ``repack`` therefore encodes just the n−1 edges the
     solver actually chose, not every measured candidate pair.
+
+    FlatTree materialization goes through the store's shared
+    :class:`~repro.store.materializer.MaterializationCache` (no private
+    per-provider tree dicts), so a repack's checkouts and the serving path
+    reuse the same byte-budgeted cache.
     """
 
     def __init__(self, store: "VersionStore") -> None:
         self._store = store
-        self._flats: Dict[int, FlatTree] = {}
-        self._fulls: Dict[int, bytes] = {}
         self._memo: Dict[Tuple[int, int], Tuple[bytes, Dict]] = {}
 
     def flat(self, vid: int) -> FlatTree:
-        if vid not in self._flats:
-            self._flats[vid] = self._store._checkout_flat(vid)
-        return self._flats[vid]
+        return self._store._checkout_flat(vid)
 
     def full_payload(self, vid: int) -> bytes:
-        if vid not in self._fulls:
-            self._fulls[vid] = encode_full(self.flat(vid))
-        return self._fulls[vid]
+        return self[(0, vid)][0]
 
     def __getitem__(self, key: Tuple[int, int]) -> Tuple[bytes, Dict]:
         if key not in self._memo:
             src, dst = key
             if src == 0:
-                self._memo[key] = (self.full_payload(dst), {})
+                self._memo[key] = (encode_full(self.flat(dst)), {})
             else:
-                self._memo[key] = encode_delta(self.flat(src), self.flat(dst))
+                # one batched plan: the pair's shared chain prefix is decoded
+                # once even when the cache can't hold it (tiny/zero budgets)
+                src_t, dst_t = self._store.materializer.checkout_many(
+                    [src, dst]
+                )
+                self._memo[key] = encode_delta(src_t, dst_t)
         return self._memo[key]
 
 
@@ -111,6 +134,9 @@ class VersionStore:
         *,
         cost_model: Optional[RecreationCostModel] = None,
         delta_hops: int = 3,
+        cache_budget_bytes: int = 256 << 20,
+        access_flush_every: int = 64,
+        prefetch_hot_k: int = 8,
     ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
@@ -124,6 +150,12 @@ class VersionStore:
         # re-measures pairs whose endpoints changed
         self._edge_cache: Dict[Tuple[int, int], Dict[str, Any]] = {}
         self.last_measured_edges = 0
+        # recreation layer: planner + byte-budgeted FlatTree LRU
+        self.materializer = Materializer(self, budget_bytes=cache_budget_bytes)
+        self.access_flush_every = access_flush_every
+        self.prefetch_hot_k = prefetch_hot_k
+        self._unflushed_accesses = 0
+        self._storage_fp: Optional[str] = None
         self._meta_path = self.root / "meta.msgpack"
         if self._meta_path.exists():
             self._load_meta()
@@ -172,38 +204,67 @@ class VersionStore:
             phi=phi,
             content_fp=hashlib.sha256(full_payload).hexdigest(),
         )
+        self._storage_fp = None  # new triple => new storage-graph fingerprint
         self._save_meta()
         return vid
 
     # ------------------------------------------------------------ checkout
+    def storage_fingerprint(self) -> str:
+        """Hash of every (vid, stored_base, object_key) triple — the cache key
+        epoch.  Changes on commit and repack, never within a read-only
+        workload, so the materialization cache invalidates exactly when the
+        storage graph does."""
+        if self._storage_fp is None:
+            self._storage_fp = _storage_graph_fp(self.versions)
+        return self._storage_fp
+
     def checkout(self, vid: int) -> FlatTree:
-        """Recreate a version by walking its storage chain."""
-        self.versions[vid].access_count += 1
-        return self._checkout_flat(vid)
+        """Recreate a version through the materialization layer."""
+        return self.checkout_many([vid])[0]
+
+    def checkout_many(self, vids: Sequence[int]) -> List[FlatTree]:
+        """Batch checkout: one plan, shared chain prefixes decoded once.
+
+        Bit-identical to ``[checkout(v) for v in vids]``.  Returned arrays
+        are shared with the cache and read-only; copy before mutating.
+        """
+        out = self.materializer.checkout_many(vids)
+        # bump only after success: a KeyError/cycle abort must not inflate
+        # the workload signal feeding frequency-aware repack
+        for vid in vids:
+            self.versions[vid].access_count += 1
+        self._unflushed_accesses += len(vids)
+        if self._unflushed_accesses >= self.access_flush_every:
+            self.flush_access_counts()
+        return out
 
     def _checkout_flat(self, vid: int) -> FlatTree:
-        chain: List[VersionMeta] = []
-        v: Optional[int] = vid
-        while v is not None:
-            meta = self.versions[v]
-            chain.append(meta)
-            v = meta.stored_base
-            if len(chain) > len(self.versions) + 1:
-                raise RuntimeError("storage graph cycle")
-        chain.reverse()
-        flat = decode_full(self.objects.get(chain[0].object_key))
-        for meta in chain[1:]:
-            flat = apply_delta(flat, self.objects.get(meta.object_key))
-        return flat
+        """Internal checkout: no access-count bump, same cache/planner path."""
+        return self.materializer.checkout(vid)
+
+    def flush_access_counts(self) -> None:
+        """Persist access counts accumulated by checkouts since the last
+        metadata write (they feed ``repack(use_access_frequencies=True)``
+        after a reload)."""
+        if self._unflushed_accesses:
+            self._save_meta()
+
+    def close(self) -> None:
+        """Flush pending metadata (access counts).  Safe to call twice."""
+        self.flush_access_counts()
 
     def recreation_cost(self, vid: int) -> float:
         """Modelled Φ along the current storage chain."""
         total = 0.0
         v: Optional[int] = vid
+        hops = 0
         while v is not None:
             meta = self.versions[v]
             total += meta.phi
             v = meta.stored_base
+            hops += 1
+            if hops > len(self.versions):
+                raise RuntimeError("storage graph cycle")
         return total
 
     def storage_bytes(self) -> int:
@@ -305,13 +366,16 @@ class VersionStore:
         **solver_kwargs,
     ) -> Dict[str, float]:
         """Re-optimize the storage graph with one of the paper's solvers and
-        rewrite physical storage to match.  Returns before/after stats."""
+        rewrite physical storage to match.  Returns before/after stats plus
+        ``gc_freed_bytes`` (orphaned object bytes reclaimed by the gc pass —
+        repack never leaves dangling objects behind)."""
         if not self.versions:
             # nothing to repack: solvers need ≥1 version and the stats below
             # take max() over the version set
             zero = {"storage_bytes": 0, "sum_recreation_s": 0.0,
                     "max_recreation_s": 0.0}
-            return {"before": dict(zero), "after": dict(zero)}
+            return {"before": dict(zero), "after": dict(zero),
+                    "gc_freed_bytes": 0}
         before = {
             "storage_bytes": self.storage_bytes(),
             "sum_recreation_s": sum(self.recreation_cost(v) for v in self.versions),
@@ -331,27 +395,42 @@ class VersionStore:
             "sum_recreation_s": sum(self.recreation_cost(v) for v in self.versions),
             "max_recreation_s": max(self.recreation_cost(v) for v in self.versions),
         }
-        self.gc()
+        freed = self.gc()
         self._save_meta()
-        return {"before": before, "after": after}
+        if use_access_frequencies:
+            # warm the cache with the hottest versions under the *new*
+            # storage graph so the first post-repack hit is already served
+            # from memory
+            hot = sorted(
+                self.versions,
+                key=lambda v: self.versions[v].access_count,
+                reverse=True,
+            )[: self.prefetch_hot_k]
+            self.materializer.prefetch(hot)
+        return {"before": before, "after": after, "gc_freed_bytes": freed}
 
     def _apply_solution(self, sol: StorageSolution, cache: _PayloadProvider) -> None:
+        # phase 1: encode every chosen edge against the *old* storage graph
+        # (the provider checkouts must not observe a half-rewritten graph)
+        encoded: Dict[int, Tuple[int, bytes, Optional[Dict]]] = {}
         for vid, parent in sol.parent.items():
+            payload, stats = cache[(parent, vid)]
+            encoded[vid] = (parent, payload, stats)
+        # phase 2: rewrite objects and metadata atomically w.r.t. checkouts
+        for vid, (parent, payload, stats) in encoded.items():
             meta = self.versions[vid]
+            key, stored = self.objects.put(payload)
             if parent == 0:
-                payload, _ = cache[(0, vid)]
-                key, stored = self.objects.put(payload)
                 meta.stored_base = None
                 meta.phi = self.cost_model.phi_full(stored, meta.raw_bytes)
             else:
-                payload, stats = cache[(parent, vid)]
-                key, stored = self.objects.put(payload)
                 meta.stored_base = parent
                 meta.phi = self.cost_model.phi_delta(
                     stored, len(payload), stats["changed_blocks"]
                 )
             meta.object_key = key
             meta.stored_bytes = stored
+        self._storage_fp = None  # storage graph rewritten: new cache epoch
 
     def gc(self) -> int:
         """Drop objects not referenced by any version; returns bytes freed."""
@@ -385,6 +464,7 @@ class VersionStore:
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+        self._unflushed_accesses = 0  # any metadata write persists counts
 
     def _load_meta(self) -> None:
         obj = msgpack.unpackb(self._meta_path.read_bytes(), raw=False)
@@ -396,6 +476,7 @@ class VersionStore:
         for key, ent in obj.get("edge_cache", {}).items():
             a, b = key.split(",")
             self._edge_cache[(int(a), int(b))] = ent
+        self._storage_fp = None  # metadata replaced: recompute lazily
 
     # -------------------------------------------------------------- limits
     def log(self) -> List[VersionMeta]:

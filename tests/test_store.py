@@ -209,7 +209,7 @@ class TestVersionStore:
         stats = store.repack("spt")
         zero = {"storage_bytes": 0, "sum_recreation_s": 0.0,
                 "max_recreation_s": 0.0}
-        assert stats == {"before": zero, "after": zero}
+        assert stats == {"before": zero, "after": zero, "gc_freed_bytes": 0}
         assert store.versions == {}
 
     def test_content_fp_stable_across_checkout_reencode(self, tmp_path):
