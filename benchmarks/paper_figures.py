@@ -18,49 +18,54 @@ import time
 from typing import List
 
 from repro.core import (
+    OptimizeSpec,
     exact_min_storage,
-    git_heuristic,
-    last_tree,
-    local_move_greedy,
-    min_max_recreation_under_budget,
-    minimum_storage_tree,
-    modified_prim,
-    shortest_path_tree,
+    optimize,
     zipf_weights,
 )
 from repro.core.solvers.mp import InfeasibleError
+from repro.core.version_graph import StorageSolution, VersionGraph
 
 from .common import Row, random_cost_graph, timed, workload
+
+
+def _solve(g: VersionGraph, n: int, **kw) -> StorageSolution:
+    """One paper problem through the declarative spec API."""
+    return optimize(g, OptimizeSpec.problem(n, **kw)).solution
+
+
+def _heuristic(g: VersionGraph, solver: str, **kw) -> StorageSolution:
+    return optimize(g, OptimizeSpec.heuristic(solver, **kw)).solution
 
 
 def fig13_tradeoff_directed() -> List[Row]:
     rows: List[Row] = []
     for kind, n in (("dc", 220), ("lc", 220)):
         g = workload(kind, n).graph
-        mca = minimum_storage_tree(g)
-        spt = shortest_path_tree(g)
+        mca = _solve(g, 1)
+        spt = _solve(g, 2)
         c0, r0, rmin = mca.storage_cost(), mca.sum_recreation(), spt.sum_recreation()
         for mult in (1.05, 1.1, 1.25, 1.5, 2.0, 3.0):
-            sol, us = timed(lambda m=mult: local_move_greedy(g, c0 * m))
+            sol, us = timed(lambda m=mult: _solve(g, 3, beta=c0 * m))
             rows.append(Row(
                 f"fig13/{kind}/lmg@{mult:g}x", us,
                 f"storage={sol.storage_cost():.3e};sum_rec={sol.sum_recreation():.3e};"
                 f"rec_vs_spt={sol.sum_recreation()/rmin:.2f}",
             ))
         for alpha in (1.25, 1.5, 2.0, 3.0):
-            sol, us = timed(lambda a=alpha: last_tree(g, a))
+            sol, us = timed(lambda a=alpha: _heuristic(g, 'last', alpha=a))
             rows.append(Row(
                 f"fig13/{kind}/last@a{alpha:g}", us,
                 f"storage={sol.storage_cost():.3e};sum_rec={sol.sum_recreation():.3e}",
             ))
         for w in (10, 25, 50):
-            sol, us = timed(lambda w=w: git_heuristic(g, window=w, max_depth=20))
+            sol, us = timed(lambda w=w: _heuristic(g, 'gith', window=w, max_depth=20))
             rows.append(Row(
                 f"fig13/{kind}/gith@w{w}", us,
                 f"storage={sol.storage_cost():.3e};sum_rec={sol.sum_recreation():.3e}",
             ))
         # headline claim: small storage slack slashes Σ-recreation vs MCA
-        lmg11 = local_move_greedy(g, c0 * 1.1)
+        lmg11 = _solve(g, 3, beta=c0 * 1.1)
         rows.append(Row(
             f"fig13/{kind}/headline", 0.0,
             f"mca_sum_rec={r0:.3e};lmg1.1x_sum_rec={lmg11.sum_recreation():.3e};"
@@ -73,19 +78,19 @@ def fig14_maxrec_directed() -> List[Row]:
     rows: List[Row] = []
     for kind in ("dc", "lc"):
         g = workload(kind, 220).graph
-        mca = minimum_storage_tree(g)
-        spt = shortest_path_tree(g)
+        mca = _solve(g, 1)
+        spt = _solve(g, 2)
         budget_mults = (1.1, 1.5, 2.0, 3.0)
         for m in budget_mults:
             sol, us = timed(
-                lambda m=m: min_max_recreation_under_budget(g, mca.storage_cost() * m)
+                lambda m=m: _solve(g, 4, beta=mca.storage_cost() * m)
             )
             rows.append(Row(
                 f"fig14/{kind}/mp@{m:g}x", us,
                 f"storage={sol.storage_cost():.3e};max_rec={sol.max_recreation():.3e}",
             ))
-            lmg = local_move_greedy(g, mca.storage_cost() * m)
-            last = last_tree(g, 1.0 + m)
+            lmg = _solve(g, 3, beta=mca.storage_cost() * m)
+            last = _heuristic(g, 'last', alpha=1.0 + m)
             rows.append(Row(
                 f"fig14/{kind}/cmp@{m:g}x", 0.0,
                 f"mp_max={sol.max_recreation():.3e};lmg_max={lmg.max_recreation():.3e};"
@@ -98,21 +103,21 @@ def fig15_undirected() -> List[Row]:
     rows: List[Row] = []
     for kind in ("dc", "bf"):
         g = workload(kind, 200, directed=False).graph
-        mst = minimum_storage_tree(g)
+        mst = _solve(g, 1)
         for m in (1.1, 1.5, 2.5):
-            lmg = local_move_greedy(g, mst.storage_cost() * m)
+            lmg = _solve(g, 3, beta=mst.storage_cost() * m)
             rows.append(Row(
                 f"fig15/{kind}/lmg@{m:g}x", 0.0,
                 f"storage={lmg.storage_cost():.3e};sum_rec={lmg.sum_recreation():.3e}",
             ))
-        la = last_tree(g, 2.0)
+        la = _heuristic(g, 'last', alpha=2.0)
         rows.append(Row(
             f"fig15/{kind}/last@a2", 0.0,
             f"storage={la.storage_cost():.3e};sum_rec={la.sum_recreation():.3e}",
         ))
-        spt = shortest_path_tree(g)
+        spt = _solve(g, 2)
         try:
-            mp = modified_prim(g, spt.max_recreation() * 1.5)
+            mp = _solve(g, 6, theta=spt.max_recreation() * 1.5)
             rows.append(Row(
                 f"fig15/{kind}/mp@1.5spt", 0.0,
                 f"storage={mp.storage_cost():.3e};max_rec={mp.max_recreation():.3e}",
@@ -127,11 +132,11 @@ def fig16_workload_aware() -> List[Row]:
     for kind in ("dc", "lf"):
         g = workload(kind, 200).graph
         w = zipf_weights(g.n, exponent=2.0, seed=3)
-        mca = minimum_storage_tree(g)
+        mca = _solve(g, 1)
         for m in (1.1, 1.5, 2.0):
             budget = mca.storage_cost() * m
-            aware = local_move_greedy(g, budget, weights=w)
-            blind = local_move_greedy(g, budget)
+            aware = _solve(g, 3, beta=budget, workload=w)
+            blind = _solve(g, 3, beta=budget)
             rows.append(Row(
                 f"fig16/{kind}/@{m:g}x", 0.0,
                 f"aware_wrec={aware.sum_recreation(w):.3e};"
@@ -147,13 +152,13 @@ def fig17_running_times() -> List[Row]:
     rows: List[Row] = []
     for n in (100, 200, 400, 800, 1600):
         g = random_cost_graph(n, avg_deg=20, seed=1)
-        mca, us_mca = timed(lambda: minimum_storage_tree(g))
-        spt, us_spt = timed(lambda: shortest_path_tree(g))
-        _, us_lmg = timed(lambda: local_move_greedy(g, mca.storage_cost() * 1.5,
-                                                    base=mca, spt=spt))
-        _, us_mp = timed(lambda: modified_prim(g, spt.max_recreation() * 2))
-        _, us_last = timed(lambda: last_tree(g, 2.0, base=mca))
-        _, us_gith = timed(lambda: git_heuristic(g, window=20, max_depth=20))
+        mca, us_mca = timed(lambda: _solve(g, 1))
+        spt, us_spt = timed(lambda: _solve(g, 2))
+        _, us_lmg = timed(lambda: _solve(g, 3, beta=mca.storage_cost() * 1.5,
+                                     base=mca, spt=spt))
+        _, us_mp = timed(lambda: _solve(g, 6, theta=spt.max_recreation() * 2))
+        _, us_last = timed(lambda: _heuristic(g, 'last', alpha=2.0, base=mca))
+        _, us_gith = timed(lambda: _heuristic(g, 'gith', window=20, max_depth=20))
         rows.append(Row(
             f"fig17/n{n}", us_lmg,
             f"edges={g.n_edges};mca_us={us_mca:.0f};spt_us={us_spt:.0f};"
@@ -167,11 +172,11 @@ def table2_exact_vs_mp() -> List[Row]:
     rows: List[Row] = []
     for n in (10, 15, 20):
         g = workload("dc", n, seed=4).graph
-        spt = shortest_path_tree(g)
+        spt = _solve(g, 2)
         base_theta = spt.max_recreation()
         for mult in (1.2, 1.5, 2.0, 3.0, 5.0):
             theta = base_theta * mult
-            mp = modified_prim(g, theta)
+            mp = _solve(g, 6, theta=theta)
             # seed the B&B with MP's solution — same role as warm-starting
             # Gurobi; the paper's Table 2 likewise reports best-found when
             # the optimizer hits its budget
@@ -194,9 +199,9 @@ def scale_trend() -> List[Row]:
     rows: List[Row] = []
     for n in (100, 250, 400):
         g = workload("lc", n, seed=9).graph
-        mca = minimum_storage_tree(g)
-        spt = shortest_path_tree(g)
-        lmg = local_move_greedy(g, mca.storage_cost() * 1.1, base=mca, spt=spt)
+        mca = _solve(g, 1)
+        spt = _solve(g, 2)
+        lmg = _solve(g, 3, beta=mca.storage_cost() * 1.1, base=mca, spt=spt)
         rows.append(Row(
             f"scale/lc{n}", 0.0,
             f"mca_sum_rec={mca.sum_recreation():.3e};"
@@ -211,8 +216,8 @@ def git_comparison() -> List[Row]:
     """§5.2-style: store-everything vs GitH vs MCA storage on an LF shape."""
     g = workload("lf", 120).graph
     full = sum(g.materialization_cost(i).delta for i in g.versions())
-    mca = minimum_storage_tree(g)
-    gith = git_heuristic(g, window=50, max_depth=50)
+    mca = _solve(g, 1)
+    gith = _heuristic(g, 'gith', window=50, max_depth=50)
     return [Row(
         "git_cmp/lf120", 0.0,
         f"store_everything={full:.3e};gith={gith.storage_cost():.3e};"

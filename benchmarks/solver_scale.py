@@ -3,7 +3,9 @@
 Sweeps instance size n over 1k → 100k versions (the paper's §6 LF/DC scale),
 generating each instance with :func:`repro.core.generate_flat` — edges land
 directly in the flat ``EdgeArrays`` representation, no per-edge dict traffic
-— and times every heuristic end to end:
+— and times every heuristic end to end through the declarative spec API
+(``optimize(g, OptimizeSpec.problem(n, ...))`` — the surface production
+callers use, so the numbers include spec validation):
 
 * MCA (Problem 1), SPT (Problem 2), GitH;
 * LMG at budget 1.05 × C_min (Problem 3);
@@ -37,15 +39,7 @@ import time
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence
 
-from repro.core import (
-    WorkloadSpec,
-    generate_flat,
-    local_move_greedy,
-    minimum_storage_tree,
-    modified_prim,
-    shortest_path_tree,
-)
-from repro.core.solvers.gith import git_heuristic
+from repro.core import OptimizeSpec, WorkloadSpec, generate_flat, optimize
 
 from .common import Row
 
@@ -90,42 +84,61 @@ def sweep(
             "solvers": {},
         }
 
-        mst, t = _timed(lambda: minimum_storage_tree(g))
+        # the whole sweep speaks the declarative spec API (what production
+        # callers hit); timings therefore include optimize()'s validation
+        # and diagnostics pass, identically for both backends
+        res, t = _timed(lambda: optimize(g, OptimizeSpec.problem(1)))
+        mst = res.solution
         entry["solvers"]["mca"] = round(t, 4)
 
-        spt, t = _timed(lambda: shortest_path_tree(g))
+        res, t = _timed(lambda: optimize(g, OptimizeSpec.problem(2)))
+        spt = res.solution
         entry["solvers"]["spt"] = round(t, 4)
 
-        _, t = _timed(lambda: git_heuristic(g, window=10, max_depth=50))
+        _, t = _timed(
+            lambda: optimize(
+                g, OptimizeSpec.heuristic("gith", window=10, max_depth=50)
+            )
+        )
         entry["solvers"]["gith"] = round(t, 4)
 
         budget = mst.storage_cost() * 1.05
-        lmg, t = _timed(lambda: local_move_greedy(g, budget, base=mst, spt=spt))
+        p3 = OptimizeSpec.problem(3, beta=budget, base=mst, spt=spt)
+        lmg, t = _timed(lambda: optimize(g, p3))
         entry["solvers"]["lmg"] = round(t, 4)
         entry["lmg_budget_mult"] = 1.05
         entry["lmg_sum_rec_vs_mst"] = round(
-            lmg.sum_recreation() / max(mst.sum_recreation(), 1e-12), 6
+            lmg.objective_value / max(mst.sum_recreation(), 1e-12), 6
         )
 
         theta = spt.max_recreation() * 1.5
-        _, t = _timed(lambda: modified_prim(g, theta))
+        p6 = OptimizeSpec.problem(6, theta=theta)
+        _, t = _timed(lambda: optimize(g, p6))
         entry["solvers"]["mp"] = round(t, 4)
 
         if "jax" in backends:
             jx: Dict[str, float] = {}
-            spt_j, t = _timed(
-                lambda: shortest_path_tree(g, backend="jax"), warmup=True
+            res, t = _timed(
+                lambda: optimize(g, OptimizeSpec.problem(2, backend="jax")),
+                warmup=True,
             )
+            spt_j = res.solution
             jx["spt"] = round(t, 4)
             _, t = _timed(
-                lambda: local_move_greedy(
-                    g, budget, base=mst, spt=spt_j, backend="jax"
+                lambda: optimize(
+                    g,
+                    OptimizeSpec.problem(
+                        3, beta=budget, base=mst, spt=spt_j, backend="jax"
+                    ),
                 ),
                 warmup=True,
             )
             jx["lmg"] = round(t, 4)
             _, t = _timed(
-                lambda: modified_prim(g, theta, backend="jax"), warmup=True
+                lambda: optimize(
+                    g, OptimizeSpec.problem(6, theta=theta, backend="jax")
+                ),
+                warmup=True,
             )
             jx["mp"] = round(t, 4)
             entry["solvers_jax"] = jx

@@ -14,7 +14,7 @@ from typing import List
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import shortest_path_tree
+from repro.core import OptimizeSpec, optimize
 from repro.kernels import ops
 from repro.store import VersionStore
 
@@ -94,10 +94,10 @@ def restore_latency_vs_theta() -> List[Row]:
             payload["w"][(i * 31) % 350:][:8] += 0.5
             vid = store.commit(payload, parents=[vid])
         g, _ = store.build_cost_graph()
-        spt = shortest_path_tree(g)
+        spt = optimize(g, OptimizeSpec.problem(2)).solution
         base = spt.max_recreation()
         for mult in (1.05, 2.0, 8.0):
-            store.repack("mp", theta=base * mult)
+            store.repack(OptimizeSpec.problem(6, theta=base * mult))
             worst_vid = max(store.versions, key=store.recreation_cost)
             t0 = time.monotonic()
             store.checkout(worst_vid)

@@ -1,9 +1,11 @@
 """Branch/merge model versioning — the paper's DATAHUB scenario on weights.
 
-Two teams fork a base checkpoint, fine-tune on different data, and the
-branches are merged (model souping).  All six states live in one version
-DAG; the storage graph is then optimized with the paper's solvers and the
-access-frequency-aware LMG variant (Fig. 16) using real access counts.
+Two teams fork a base checkpoint onto *named branches*, fine-tune on
+different data, and the branches are merged (model souping) and tagged.
+All six states live in one version DAG behind the ``Repository`` facade;
+the storage graph is then optimized declaratively — a Problem-3 spec with
+``use_access_frequencies=True`` routing the real access counts into the
+spec's workload field (paper Fig. 16).
 
 Run:  PYTHONPATH=src python examples/branching_finetune.py
 """
@@ -16,8 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS
+from repro.core import OptimizeSpec
 from repro.models.registry import get_model
-from repro.store import VersionStore
+from repro.store import Repository
 from repro.training.optimizer import OptimizerConfig, init_opt_state
 from repro.training.train_loop import TrainConfig, make_train_step
 from repro.data.pipeline import SyntheticTokenPipeline
@@ -43,55 +46,69 @@ def main() -> None:
     base = bundle.init(jax.random.PRNGKey(0))
 
     d = tempfile.mkdtemp(prefix="repro_branches_")
-    store = VersionStore(d)
+    repo = Repository(d)
 
-    v_base = store.commit(base, message="pretrained base")
-    print(f"v{v_base}: base committed")
+    v_base = repo.commit(base, message="pretrained base")
+    repo.tag("pretrained", at=v_base)
+    print(f"v{v_base}: base committed on 'main', tagged 'pretrained'")
 
+    repo.branch("team-a", at="pretrained")
     team_a, loss_a = finetune(bundle, base, seed=1)
-    v_a = store.commit(team_a, parents=[v_base], message="team A finetune")
+    v_a = repo.commit(team_a, branch="team-a", message="team A finetune")
     team_a2, loss_a2 = finetune(bundle, team_a, seed=11)
-    v_a2 = store.commit(team_a2, parents=[v_a], message="team A round 2")
+    v_a2 = repo.commit(team_a2, branch="team-a", message="team A round 2")
 
+    repo.branch("team-b", at="pretrained")
     team_b, loss_b = finetune(bundle, base, seed=2)
-    v_b = store.commit(team_b, parents=[v_base], message="team B finetune")
+    v_b = repo.commit(team_b, branch="team-b", message="team B finetune")
 
     soup = jax.tree.map(lambda a, b: ((a.astype(jnp.float32)
                                        + b.astype(jnp.float32)) / 2).astype(a.dtype),
                         team_a2, team_b)
-    v_soup = store.commit(soup, parents=[v_a2, v_b], message="soup(A2, B)")
-    print(f"version DAG: base->({v_a}->{v_a2}, {v_b})->merge v{v_soup}")
+    # merge commit: both branch tips as parents, landing on main
+    v_soup = repo.commit(soup, parent=["team-a", "team-b"], branch="main",
+                         message="soup(A2, B)")
+    repo.tag("soup-v1", at=v_soup)
+    print(f"version DAG: base->({v_a}->{v_a2}, {v_b})->merge v{v_soup}; "
+          f"branches={repo.branches()} tags={repo.tags()}")
 
+    store = repo.store
     full = sum(m.raw_bytes for m in store.log())
     print(f"raw payloads {full/1e6:.1f} MB -> stored {store.storage_bytes()/1e6:.1f} MB "
           f"(delta chains)")
 
+    # what did team A's second round actually touch vs the base?
+    dstat = repo.diff("pretrained", "team-a")
+    print(f"diff pretrained..team-a: {dstat.summary()}")
+
     # simulate an access pattern: the soup is served constantly — after the
     # first request the materialization cache serves it from memory
     for _ in range(25):
-        store.checkout(v_soup)
-    store.checkout(v_base)
+        repo.checkout("soup-v1")
+    repo.checkout("pretrained")
     mstats = store.materializer.stats()
     print(f"serving 26 checkouts: {mstats['hits']} cache hits, "
           f"{mstats['full_decodes']} full decodes + "
           f"{mstats['delta_applies']} delta applies total")
 
-    stats = store.repack("lmg", budget=store.storage_bytes() * 1.4,
-                         use_access_frequencies=True)
-    print(f"workload-aware LMG repack: Σrestore "
+    # declarative workload-aware repack: Problem 3 (min Σ w_i R_i s.t.
+    # C ≤ 1.4x current) with the recorded access counts as the workload
+    spec = OptimizeSpec.problem(3, beta=store.storage_bytes() * 1.4)
+    stats = repo.repack(spec, use_access_frequencies=True)
+    print(f"workload-aware repack [{stats['optimize']['solver']}]: Σrestore "
           f"{stats['before']['sum_recreation_s']*1e3:.1f}ms -> "
           f"{stats['after']['sum_recreation_s']*1e3:.1f}ms "
           f"at ≤1.4x storage (gc freed {stats['gc_freed_bytes']/1e6:.1f} MB); "
           f"hot versions prefetched back into the cache")
 
     # every version still reconstructs exactly
-    rec = store.checkout(v_soup)
-    want_leaves = jax.tree_util.tree_flatten_with_path(soup)[0]
+    rec = repo.checkout("soup-v1")
     from repro.store import flatten_payload
     flat_soup = flatten_payload(soup)
     for k, arr in flat_soup.items():
         np.testing.assert_array_equal(rec[k], np.asarray(arr))
     print("soup checkout verified byte-identical ✓")
+    repo.close()
     shutil.rmtree(d, ignore_errors=True)
 
 

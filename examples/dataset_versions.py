@@ -1,9 +1,10 @@
 """Versioned datasets feeding the training pipeline (paper scenario #2).
 
 A tokenized corpus evolves through cleaning -> dedup -> mixture updates;
-each stage is a version in the store (deltas, not copies).  Training jobs
-pin a dataset *version id* — switching versions is a checkout, reproducible
-forever, and the storage stays near the size of one copy + edits.
+each stage is a commit on the repository's ``main`` branch, *tagged* with a
+stable name (deltas, not copies).  Training jobs pin a dataset tag —
+switching versions is a checkout, reproducible forever, and the storage
+stays near the size of one copy + edits.
 
 Run:  PYTHONPATH=src python examples/dataset_versions.py
 """
@@ -14,36 +15,44 @@ import tempfile
 import numpy as np
 
 from repro.data.pipeline import VersionedDatasetPipeline
-from repro.store import VersionStore
+from repro.store import Repository
 
 
 def main() -> None:
     d = tempfile.mkdtemp(prefix="repro_data_")
-    store = VersionStore(d)
+    repo = Repository(d)
+    store = repo.store
     rng = np.random.RandomState(0)
 
-    # v1: raw corpus — 4 shards of token ids
+    # raw corpus — 4 shards of token ids
     shards = {f"shard{i:02d}": rng.randint(0, 50000, 200_000).astype(np.int32)
               for i in range(4)}
-    v1 = store.commit(shards, message="raw corpus")
+    repo.commit(shards, message="raw corpus")
+    repo.tag("corpus-raw")
 
-    # v2: cleaning pass rewrites 3% of tokens in two shards
+    # cleaning pass rewrites 3% of tokens in two shards
     cleaned = {k: v.copy() for k, v in shards.items()}
     for k in ("shard00", "shard02"):
         idx = rng.choice(cleaned[k].size, size=cleaned[k].size * 3 // 100, replace=False)
         cleaned[k][idx] = 0
-    v2 = store.commit(cleaned, parents=[v1], message="cleaning pass")
+    repo.commit(cleaned, message="cleaning pass")
+    repo.tag("corpus-cleaned")
 
-    # v3: dedup drops one shard, adds a fresh one
+    # dedup drops one shard, adds a fresh one
     dedup = {k: v for k, v in cleaned.items() if k != "shard03"}
     dedup["shard04"] = rng.randint(0, 50000, 150_000).astype(np.int32)
-    v3 = store.commit(dedup, parents=[v2], message="dedup + new crawl")
+    v3 = repo.commit(dedup, message="dedup + new crawl")
+    repo.tag("corpus-dedup-v1")
 
     raw = sum(m.raw_bytes for m in store.log())
     print(f"3 corpus versions: raw {raw/1e6:.1f} MB -> stored "
-          f"{store.storage_bytes()/1e6:.1f} MB")
+          f"{store.storage_bytes()/1e6:.1f} MB; tags={sorted(repo.tags())}")
+    print(f"cleaning touched: {repo.diff('corpus-raw', 'corpus-cleaned').summary()}")
 
-    pipe = VersionedDatasetPipeline(store, v3, seq_len=128, global_batch=8)
+    # the training job pins the *tag*; the pipeline still speaks raw vids
+    assert repo.resolve("corpus-dedup-v1") == v3
+    pipe = VersionedDatasetPipeline(store, repo.resolve("corpus-dedup-v1"),
+                                    seq_len=128, global_batch=8)
     b0 = pipe.next_batch()
     snap = pipe.snapshot()
     b1 = pipe.next_batch()
@@ -53,8 +62,9 @@ def main() -> None:
     pipe2.restore(snap)
     b1_again = pipe2.next_batch()
     assert np.array_equal(b1["tokens"], b1_again["tokens"])
-    print(f"pinned dataset v{v3}; batch shape {b0['tokens'].shape}; "
-          f"resume-from-snapshot determinism ✓")
+    print(f"pinned dataset 'corpus-dedup-v1' (v{v3}); batch shape "
+          f"{b0['tokens'].shape}; resume-from-snapshot determinism ✓")
+    repo.close()
     shutil.rmtree(d, ignore_errors=True)
 
 

@@ -1,11 +1,14 @@
 """Quickstart: the paper end to end in two minutes (CPU).
 
-1. Reproduces the paper's Figure 1 worked example exactly (storage graphs,
-   costs, solver outputs).
-2. Builds a synthetic versioned-dataset workload (paper §5.1), runs every
-   solver, and prints the storage/recreation frontier.
-3. Commits real tensor payloads to a VersionStore, repacks with LMG/MP, and
-   verifies checkouts are byte-identical.
+Canonical API tour:
+
+1. Reproduces the paper's Figure 1 worked example with the declarative
+   spec grid — every problem is ``optimize(graph, OptimizeSpec.problem(n))``.
+2. Builds a synthetic versioned-dataset workload (paper §5.1), sweeps the
+   grid, and prints the storage/recreation frontier.
+3. Commits real tensor payloads through a ``Repository`` (named branches +
+   tags over the VersionStore), repacks against a spec, and verifies
+   checkouts are byte-identical.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,15 +16,13 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 
 from repro.core import (
-    VersionGraph, dc_like, generate, git_heuristic, last_tree,
-    local_move_greedy, minimum_storage_tree, modified_prim,
-    shortest_path_tree, zipf_weights,
+    OptimizeSpec, VersionGraph, dc_like, generate, optimize,
 )
-from repro.store import VersionStore, flatten_payload
+from repro.store import Repository
 
 
 def figure1() -> None:
-    print("=== Paper Figure 1 ===")
+    print("=== Paper Figure 1 — the (objective, constraint) grid ===")
     g = VersionGraph(5, directed=True)
     for i, (s, r) in enumerate(
         [(10000, 10000), (10100, 10100), (9700, 9700), (9800, 9800), (10120, 10120)], 1
@@ -33,69 +34,83 @@ def figure1() -> None:
     g.set_delta(3, 5, 800, 2500)
     g.set_delta(2, 5, 200, 550)
 
-    spt = shortest_path_tree(g)
-    mca = minimum_storage_tree(g)
-    print(f"  store-everything (Fig 1 ii):   C={spt.storage_cost():>7.0f}  "
-          f"maxR={spt.max_recreation():.0f}")
-    print(f"  min-storage MCA  (Fig 1 iii):  C={mca.storage_cost():>7.0f}  "
-          f"maxR={mca.max_recreation():.0f}")
-    lmg = local_move_greedy(g, budget=20150)
-    print(f"  balanced (Fig 1 iv budget):    C={lmg.storage_cost():>7.0f}  "
-          f"maxR={lmg.max_recreation():.0f}  materialized={lmg.materialized()}")
+    spt = optimize(g, OptimizeSpec.problem(2))       # min every R_i
+    mca = optimize(g, OptimizeSpec.problem(1))       # min storage C
+    print(f"  store-everything (Fig 1 ii):   C={spt.objective_values['storage']:>7.0f}  "
+          f"maxR={spt.objective_values['max_recreation']:.0f}")
+    print(f"  min-storage MCA  (Fig 1 iii):  C={mca.objective_value:>7.0f}  "
+          f"maxR={mca.objective_values['max_recreation']:.0f}")
+    lmg = optimize(g, OptimizeSpec.problem(3, beta=20150))
+    print(f"  balanced (Fig 1 iv budget):    C={lmg.objective_values['storage']:>7.0f}  "
+          f"maxR={lmg.objective_values['max_recreation']:.0f}  "
+          f"materialized={lmg.solution.materialized()}")
+    print(f"  -> {lmg.summary()}")
 
 
 def frontier() -> None:
-    print("\n=== Solver frontier on a DC-like synthetic workload (paper §5.1) ===")
+    print("\n=== Spec grid on a DC-like synthetic workload (paper §5.1) ===")
     wl = generate(dc_like(150, seed=7))
     g = wl.graph
-    mca = minimum_storage_tree(g)
-    spt = shortest_path_tree(g)
-    c0, r0 = mca.storage_cost(), mca.sum_recreation()
-    print(f"  {'solver':14s} {'storage(GB)':>12s} {'sum rec(GB)':>12s} {'max rec(GB)':>12s}")
+    mca = optimize(g, OptimizeSpec.problem(1))
+    spt = optimize(g, OptimizeSpec.problem(2))
+    c0, r0 = mca.objective_value, mca.objective_values["sum_recreation"]
+    print(f"  {'spec':22s} {'storage(GB)':>12s} {'sum rec(GB)':>12s} {'max rec(GB)':>12s}")
     rows = [
-        ("MCA", mca), ("SPT", spt),
-        ("LMG 1.1x", local_move_greedy(g, c0 * 1.1)),
-        ("LMG 1.5x", local_move_greedy(g, c0 * 1.5)),
-        ("MP θ=2·spt", modified_prim(g, spt.max_recreation() * 2)),
-        ("LAST α=2", last_tree(g, 2.0)),
-        ("GitH w=20", git_heuristic(g, window=20, max_depth=20)),
+        ("P1 min C", mca),
+        ("P2 min each R", spt),
+        ("P3 β=1.1·Cmin", optimize(g, OptimizeSpec.problem(3, beta=c0 * 1.1))),
+        ("P3 β=1.5·Cmin", optimize(g, OptimizeSpec.problem(3, beta=c0 * 1.5))),
+        ("P6 θ=2·maxSPT", optimize(g, OptimizeSpec.problem(
+            6, theta=spt.objective_values["max_recreation"] * 2))),
+        ("LAST α=2", optimize(g, OptimizeSpec.heuristic("last", alpha=2.0))),
+        ("GitH w=20", optimize(g, OptimizeSpec.heuristic("gith", window=20,
+                                                         max_depth=20))),
     ]
-    for name, sol in rows:
-        print(f"  {name:14s} {sol.storage_cost()/1e9:12.3f} "
-              f"{sol.sum_recreation()/1e9:12.3f} {sol.max_recreation()/1e9:12.4f}")
+    for name, res in rows:
+        v = res.objective_values
+        print(f"  {name:22s} {v['storage']/1e9:12.3f} "
+              f"{v['sum_recreation']/1e9:12.3f} {v['max_recreation']/1e9:12.4f}")
     # the paper's headline: ~1.1x storage slack cuts Σ-recreation enormously
-    lmg = local_move_greedy(g, c0 * 1.1)
-    print(f"  -> LMG at 1.1x MCA storage reduces Σ-recreation "
-          f"{r0 / lmg.sum_recreation():.1f}x vs MCA")
+    lmg = optimize(g, OptimizeSpec.problem(3, beta=c0 * 1.1))
+    print(f"  -> P3 at 1.1x MCA storage reduces Σ-recreation "
+          f"{r0 / lmg.objective_value:.1f}x vs MCA")
 
 
 def tensors() -> None:
-    print("\n=== VersionStore on real tensor payloads ===")
+    print("\n=== Repository on real tensor payloads ===")
     import tempfile
     rng = np.random.RandomState(0)
     payload = {"w": rng.randn(256, 256).astype(np.float32)}
     with tempfile.TemporaryDirectory() as d:
-        store = VersionStore(d)
-        vids = [store.commit(payload, message="base")]
+        repo = Repository(d)
+        vids = [repo.commit(payload, message="base")]
         for i in range(5):
             payload = {"w": payload["w"].copy()}
             payload["w"][i * 10 : i * 10 + 8] += 1.0  # localized edit
-            vids.append(store.commit(payload, parents=[vids[-1]]))
-        print(f"  6 versions, {store.storage_bytes()/1e3:.1f} KB stored "
+            vids.append(repo.commit(payload, message=f"edit {i}"))
+        repo.tag("release-1")          # immutable pointer at the main tip
+        repo.branch("hotfix", at=vids[2])
+        store = repo.store
+        print(f"  6 versions on 'main' + tag + branch, "
+              f"{store.storage_bytes()/1e3:.1f} KB stored "
               f"(full would be ~{6 * 256 * 256 * 4 / 1e3:.0f} KB uncompressed)")
-        stats = store.repack("mp", theta=store.cost_model.phi_full(300_000, 300_000) * 2)
-        print(f"  repack(MP): storage {stats['before']['storage_bytes']/1e3:.1f} "
+        sla = store.cost_model.phi_full(300_000, 300_000) * 2
+        stats = repo.repack(OptimizeSpec.problem(6, theta=sla))
+        print(f"  repack(P6 θ=SLA): storage {stats['before']['storage_bytes']/1e3:.1f} "
               f"-> {stats['after']['storage_bytes']/1e3:.1f} KB, "
-              f"max restore {stats['after']['max_recreation_s']*1e3:.2f} ms")
-        w = store.checkout(vids[-1])["w"]
+              f"max restore {stats['after']['max_recreation_s']*1e3:.2f} ms "
+              f"(solver={stats['optimize']['solver']})")
+        w = repo.checkout("release-1")["w"]
         assert np.array_equal(w, payload["w"]), "checkout mismatch!"
-        print("  checkout verified byte-identical ✓")
+        print("  checkout('release-1') verified byte-identical ✓")
         # batched checkout: one plan over the storage graph, shared chain
         # prefixes decoded once, bit-identical to sequential checkouts
-        trees = store.checkout_many(vids)
+        trees = repo.checkout_many(vids)
         assert np.array_equal(trees[-1]["w"], payload["w"])
+        d01 = repo.diff(vids[0], "release-1")
         print(f"  checkout_many({len(vids)} versions) in one plan ✓ "
-              f"(cache: {store.materializer.stats()['hits']} hits)")
+              f"(cache: {store.materializer.stats()['hits']} hits); "
+              f"diff base..release-1: {d01.summary()}")
 
 
 if __name__ == "__main__":

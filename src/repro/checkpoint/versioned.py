@@ -29,6 +29,7 @@ from typing import Any, Callable, Dict, Optional, Sequence
 import jax
 import numpy as np
 
+from ..core import OptimizeSpec
 from ..store import VersionStore
 from ..store.delta import FlatTree, flatten_payload
 
@@ -142,15 +143,27 @@ class VersionedCheckpointManager:
         return self.store.recreation_cost(vid)
 
     # --------------------------------------------------------------- repack
-    def repack(self, solver: str = "mp", **kw) -> Dict:
-        """Re-optimize storage; default enforces the restore-latency SLA
-        (Problem 6 with θ = max_restore_cost_s)."""
+    def sla_spec(self, theta: Optional[float] = None) -> OptimizeSpec:
+        """The restore-latency SLA as a declarative spec: Problem 6
+        (min storage s.t. max R_i ≤ θ) with θ = ``max_restore_cost_s``."""
+        theta = theta if theta is not None else self.max_restore_cost_s
+        if theta is None:
+            raise ValueError("set max_restore_cost_s or pass theta=")
+        return OptimizeSpec.problem(6, theta=theta)
+
+    def repack(self, spec: "OptimizeSpec | str | None" = None, **kw) -> Dict:
+        """Re-optimize storage against an OptimizeSpec; the default enforces
+        the restore-latency SLA (:meth:`sla_spec`).  A string solver name is
+        the deprecated legacy surface, forwarded to ``VersionStore.repack``'s
+        shim (with the SLA θ injected for ``"mp"``)."""
         self.wait()
-        if solver == "mp" and "theta" not in kw:
+        if spec is None:
+            spec = self.sla_spec(kw.pop("theta", None))
+        elif isinstance(spec, str) and spec == "mp" and "theta" not in kw:
             if self.max_restore_cost_s is None:
                 raise ValueError("set max_restore_cost_s or pass theta=")
             kw["theta"] = self.max_restore_cost_s
-        return self.store.repack(solver, **kw)
+        return self.store.repack(spec, **kw)
 
     def _auto_repack(self):
         try:

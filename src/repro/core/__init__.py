@@ -8,6 +8,10 @@ MCA / SPT / exact solvers.
 
 from .problems import (
     SOLVERS,
+    ConstraintViolation,
+    optimize,
+    run_solver,
+    spec_from_solver,
     solve_problem1,
     solve_problem2,
     solve_problem3,
@@ -15,6 +19,7 @@ from .problems import (
     solve_problem5,
     solve_problem6,
 )
+from .spec import Constraint, Objective, OptimizeResult, OptimizeSpec
 from .solvers.exact import ExactResult, exact_min_storage
 from .solvers.gith import git_heuristic
 from .solvers.last import last_tree
@@ -60,6 +65,14 @@ __all__ = [
     "solve_problem5",
     "solve_problem6",
     "SOLVERS",
+    "Objective",
+    "Constraint",
+    "OptimizeSpec",
+    "OptimizeResult",
+    "optimize",
+    "run_solver",
+    "spec_from_solver",
+    "ConstraintViolation",
     "WorkloadSpec",
     "SyntheticWorkload",
     "generate",

@@ -1,28 +1,72 @@
-"""The six optimization problems of paper §2.1, dispatched to solvers.
+"""The paper's optimization problems behind one declarative entry point.
 
-| Problem | objective            | constraint       | solver                       |
-|---------|----------------------|------------------|------------------------------|
-| 1       | min C                | R_i < ∞          | MST / MCA                    |
-| 2       | min each R_i         | C < ∞            | SPT                          |
-| 3       | min Σ R_i            | C ≤ β            | LMG                          |
-| 4       | min max R_i          | C ≤ β            | MP + bisection               |
-| 5       | min C                | Σ R_i ≤ θ        | LMG + binary search          |
-| 6       | min C                | max R_i ≤ θ      | MP                           |
+§2.1 poses six problems, but they are all points on a single
+(objective, constraint) grid — which is exactly how the public API now
+exposes them: build an :class:`~repro.core.spec.OptimizeSpec` and call
+:func:`optimize`.
+
+::
+
+    spec                                              problem  solver
+    ------------------------------------------------  -------  --------------
+    OptimizeSpec.problem(1)
+      = min storage                                   1        MST / MCA
+    OptimizeSpec.problem(2)
+      = min every_recreation                          2        SPT
+    OptimizeSpec.problem(3, beta=B)
+      = min sum_recreation  s.t. storage <= B         3        LMG
+    OptimizeSpec.problem(4, beta=B)
+      = min max_recreation  s.t. storage <= B         4        MP + bisection
+    OptimizeSpec.problem(5, theta=T)
+      = min storage  s.t. sum_recreation <= T         5        LMG + bin search
+    OptimizeSpec.problem(6, theta=T)
+      = min storage  s.t. max_recreation <= T         6        MP
+
+Specs may be built from parts too —
+``OptimizeSpec(Objective.sum_recreation(), (Constraint.storage_at_most(B),))``
+is the same grid point as ``OptimizeSpec.problem(3, beta=B)``.  ``optimize``
+maps the spec onto the right problem, runs the solver (``backend="numpy"`` or
+``"jax"``, ``pallas=True`` for the Pallas reduction kernels), transparently
+falls back to the bit-identical NumPy path where the jitted formulation does
+not apply (directed MCA cycle contraction; degree-skew instances whose dense
+padded layout would OOM), validates every constraint on the returned tree,
+and wraps the :class:`~repro.core.version_graph.StorageSolution` in an
+:class:`~repro.core.spec.OptimizeResult` carrying the problem id, solver and
+backend actually used, objective values, constraint slack, and wall time.
+
+``workload={vid: weight}`` turns the recreation objective into
+``sum_i w_i R_i`` (paper Fig. 16); only the LMG-based grid points (Problems
+3 and 5) honor it, and every other point refuses loudly instead of silently
+dropping the weights.
+
+The legacy surfaces remain: ``solve_problem1..6`` are the positional
+entry points (bit-identical to ``optimize`` on the corresponding spec — a
+property test enforces this), and the ``SOLVERS`` registry / ``run_solver``
+dispatch by name with validated kwargs — unknown solver names and
+unsupported kwargs raise ``ValueError`` naming the offender and the
+accepted set.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+import time
+from typing import Any, Callable, Dict, FrozenSet, Optional, Tuple
 
+from .solvers import CONSTRAINT_TOL, BackendUnsupported
 from .solvers.gith import git_heuristic
 from .solvers.last import last_tree
 from .solvers.lmg import local_move_greedy, minimize_storage_sum_recreation
 from .solvers.mp import min_max_recreation_under_budget, modified_prim
 from .solvers.mst import minimum_storage_tree
 from .solvers.spt import shortest_path_tree
+from .spec import OptimizeResult, OptimizeSpec
 from .version_graph import StorageSolution, VersionGraph
 
 __all__ = [
+    "optimize",
+    "ConstraintViolation",
+    "run_solver",
+    "spec_from_solver",
     "solve_problem1",
     "solve_problem2",
     "solve_problem3",
@@ -33,6 +77,12 @@ __all__ = [
 ]
 
 
+class ConstraintViolation(RuntimeError):
+    """A solver returned a tree violating the spec's constraints — a solver
+    bug by definition (``optimize`` refuses to return such a solution)."""
+
+
+# --------------------------------------------------------------- legacy API
 def solve_problem1(g: VersionGraph) -> StorageSolution:
     """Minimize total storage; recreation costs merely finite."""
     return minimum_storage_tree(g)
@@ -67,16 +117,284 @@ def solve_problem6(g: VersionGraph, theta: float) -> StorageSolution:
     return modified_prim(g, theta)
 
 
-# registry used by benchmarks / the version store's repack policy; the
-# array-native solvers take backend="numpy"|"jax" (+ pallas=True to route
-# reductions through the Pallas kernels — see core/solvers/__init__.py)
-SOLVERS = {
-    "mca": lambda g, **kw: minimum_storage_tree(g, **kw),
-    "spt": lambda g, **kw: shortest_path_tree(g, **kw),
-    "lmg": lambda g, budget, **kw: local_move_greedy(g, budget, **kw),
-    "mp": lambda g, theta, **kw: modified_prim(g, theta, **kw),
-    "last": lambda g, alpha=2.0, **kw: last_tree(g, alpha),
-    "gith": lambda g, window=10, max_depth=50, **kw: git_heuristic(
-        g, window=window, max_depth=max_depth
+# ---------------------------------------------------------- named dispatch
+# per-solver contract: callable, required kwargs, accepted kwargs
+_SOLVER_TABLE: Dict[str, Tuple[Callable, FrozenSet[str], FrozenSet[str]]] = {
+    "mca": (
+        minimum_storage_tree,
+        frozenset(),
+        frozenset({"backend", "pallas"}),
+    ),
+    "spt": (
+        shortest_path_tree,
+        frozenset(),
+        frozenset({"weight", "backend", "pallas"}),
+    ),
+    "lmg": (
+        lambda g, budget, **kw: local_move_greedy(g, budget, **kw),
+        frozenset({"budget"}),
+        frozenset({"budget", "weights", "base", "spt", "backend", "pallas"}),
+    ),
+    "mp": (
+        lambda g, theta, **kw: modified_prim(g, theta, **kw),
+        frozenset({"theta"}),
+        frozenset({"theta", "backend", "pallas"}),
+    ),
+    "last": (
+        lambda g, alpha=2.0, **kw: last_tree(g, alpha, **kw),
+        frozenset(),
+        frozenset({"alpha", "base"}),
+    ),
+    "gith": (
+        git_heuristic,
+        frozenset(),
+        frozenset({"window", "max_depth"}),
     ),
 }
+
+
+def _validate_solver_kwargs(name: str, kwargs: Dict[str, Any]) -> Callable:
+    """Shared validation for ``run_solver`` and the legacy spec shim; returns
+    the solver callable.  Unknown names and unsupported/missing kwargs raise
+    ``ValueError`` naming the solver, the offending kwarg, and the accepted
+    set — never a bare ``KeyError``/``TypeError``."""
+    entry = _SOLVER_TABLE.get(name)
+    if entry is None:
+        raise ValueError(
+            f"unknown solver {name!r}: accepted solvers are "
+            f"{sorted(_SOLVER_TABLE)}"
+        )
+    fn, required, accepted = entry
+    unknown = set(kwargs) - accepted
+    if unknown:
+        raise ValueError(
+            f"solver {name!r} does not accept kwarg(s) {sorted(unknown)}; "
+            f"accepted: {sorted(accepted)}"
+        )
+    missing = required - set(kwargs)
+    if missing:
+        raise ValueError(
+            f"solver {name!r} requires kwarg(s) {sorted(missing)}"
+        )
+    return fn
+
+
+def run_solver(name: str, g: VersionGraph, **kwargs: Any) -> StorageSolution:
+    """Dispatch a solver by name with validated kwargs (see
+    :func:`_validate_solver_kwargs` for the failure modes)."""
+    return _validate_solver_kwargs(name, kwargs)(g, **kwargs)
+
+
+class _SolverRegistry(dict):
+    """Name -> callable registry whose misses explain themselves."""
+
+    def __missing__(self, key):
+        raise ValueError(
+            f"unknown solver {key!r}: accepted solvers are {sorted(self)}"
+        )
+
+
+def _make_entry(name: str) -> Callable:
+    def call(g: VersionGraph, **kwargs: Any) -> StorageSolution:
+        return run_solver(name, g, **kwargs)
+
+    call.__name__ = f"solver_{name}"
+    return call
+
+
+# registry used by benchmarks / the version store's legacy repack shim; each
+# entry validates its kwargs (see ``run_solver``) and the registry itself
+# turns unknown names into a ValueError listing the accepted set
+SOLVERS = _SolverRegistry({name: _make_entry(name) for name in _SOLVER_TABLE})
+
+
+def spec_from_solver(solver: str, kwargs: Dict[str, Any]) -> OptimizeSpec:
+    """Map a legacy ``solver=`` string + kwargs to the equivalent spec.
+
+    This is the deprecated-shim constructor behind
+    ``VersionStore.repack("lmg", budget=...)`` and friends; new code should
+    build the :class:`OptimizeSpec` directly.
+    """
+    _validate_solver_kwargs(solver, kwargs)
+    kw = dict(kwargs)
+    backend = kw.pop("backend", "numpy")
+    pallas = kw.pop("pallas", False)
+    if solver == "mca":
+        return OptimizeSpec.problem(1, backend=backend, pallas=pallas)
+    if solver == "spt":
+        # Problem 2 is defined over Φ; a delta-weighted SPT is not a grid
+        # point, so refuse rather than silently optimize the wrong metric
+        if kw.pop("weight", "phi") != "phi":
+            raise ValueError(
+                "the spec grid's Problem 2 minimizes recreation cost (phi); "
+                "for a delta-weighted SPT call shortest_path_tree(weight=...) "
+                "directly"
+            )
+        return OptimizeSpec.problem(2, backend=backend, pallas=pallas)
+    if solver == "lmg":
+        return OptimizeSpec.problem(
+            3, beta=kw.pop("budget"), workload=kw.pop("weights", None),
+            backend=backend, pallas=pallas, **kw,
+        )
+    if solver == "mp":
+        return OptimizeSpec.problem(
+            6, theta=kw.pop("theta"), backend=backend, pallas=pallas, **kw,
+        )
+    # balance heuristics ride outside the grid
+    return OptimizeSpec.heuristic(solver, backend=backend, pallas=pallas, **kw)
+
+
+# ------------------------------------------------------------ optimize(...)
+# solver options each grid point accepts (beyond backend/pallas, which are
+# spec fields)
+_PROBLEM_OPTIONS: Dict[int, FrozenSet[str]] = {
+    1: frozenset(),
+    2: frozenset(),
+    3: frozenset({"base", "spt"}),
+    4: frozenset({"tol", "max_iters"}),
+    5: frozenset({"tol", "max_iters"}),
+    6: frozenset(),
+}
+_HEURISTIC_OPTIONS: Dict[str, FrozenSet[str]] = {
+    "last": frozenset({"alpha", "base"}),
+    "gith": frozenset({"window", "max_depth"}),
+}
+
+
+def _check_options(opts: Dict[str, Any], accepted: FrozenSet[str], who: str) -> None:
+    unknown = set(opts) - accepted
+    if unknown:
+        raise ValueError(
+            f"{who} does not accept option(s) {sorted(unknown)}; "
+            f"accepted: {sorted(accepted)}"
+        )
+
+
+def optimize(g: VersionGraph, spec: OptimizeSpec) -> OptimizeResult:
+    """Solve the grid point named by ``spec`` on ``g``.
+
+    Returns an :class:`~repro.core.spec.OptimizeResult`; the wrapped
+    ``StorageSolution`` is bit-identical to the corresponding legacy
+    ``solve_problemN`` call (same tree, same float costs).  Raises
+    ``ValueError`` for infeasible bounds (propagated from the solvers) and
+    :class:`ConstraintViolation` if a solver ever returned a tree violating
+    the spec — the latter is a bug trap, not an expected path.
+    """
+    if not isinstance(spec, OptimizeSpec):
+        raise TypeError(
+            f"optimize() takes an OptimizeSpec, got {type(spec).__name__}; "
+            f"legacy string solvers go through run_solver()/spec_from_solver()"
+        )
+    t0 = time.monotonic()
+    weights = spec.weights()
+    opts = spec.options_dict()
+    diagnostics: Dict[str, Any] = {}
+    backend_used = spec.backend
+
+    problem = spec.problem_id()
+    solver_name = spec.solver_name()
+    if problem is None:
+        _check_options(opts, _HEURISTIC_OPTIONS[spec.solver], f"solver {spec.solver!r}")
+        sol = run_solver(spec.solver, g, **opts)
+        backend_used = "numpy"  # heuristics are host-only
+        if spec.backend != "numpy":
+            diagnostics["backend_fallback"] = (
+                f"heuristic solver {spec.solver!r} has no jitted formulation"
+            )
+    else:
+        _check_options(opts, _PROBLEM_OPTIONS[problem], f"Problem {problem}")
+
+        def run(backend: str) -> StorageSolution:
+            if problem == 1:
+                return minimum_storage_tree(g, backend=backend,
+                                            pallas=spec.pallas)
+            if problem == 2:
+                return shortest_path_tree(g, backend=backend,
+                                          pallas=spec.pallas)
+            if problem == 3:
+                return local_move_greedy(
+                    g, spec.bound("storage"), weights=weights,
+                    backend=backend, pallas=spec.pallas, **opts,
+                )
+            if problem == 4:
+                return min_max_recreation_under_budget(
+                    g, spec.bound("storage"), backend=backend,
+                    pallas=spec.pallas, **opts,
+                )
+            if problem == 5:
+                return minimize_storage_sum_recreation(
+                    g, spec.bound("sum_recreation"), weights=weights,
+                    backend=backend, pallas=spec.pallas, **opts,
+                )
+            return modified_prim(
+                g, spec.bound("max_recreation"), backend=backend,
+                pallas=spec.pallas,
+            )
+
+        try:
+            sol = run(spec.backend)
+        except BackendUnsupported as e:
+            # the jax backend refuses instances its formulation cannot run
+            # (degree skew blowing up the dense padded layout); the NumPy
+            # CSR path is bit-identical, so fall back transparently
+            diagnostics["backend_fallback"] = str(e)
+            backend_used = "numpy"
+            sol = run("numpy")
+        if problem == 1 and g.directed and spec.backend == "jax":
+            # MCA cycle contraction is host-only; minimum_storage_tree took
+            # the Edmonds path regardless of the requested backend
+            backend_used = "numpy"
+            diagnostics.setdefault(
+                "backend_fallback",
+                "directed Problem 1 uses the host Edmonds MCA "
+                "(cycle contraction has no jitted formulation)",
+            )
+
+    sol.validate()
+
+    # objective values + constraint validation on the *returned* tree
+    values: Dict[str, float] = {
+        "storage": sol.storage_cost(),
+        "sum_recreation": sol.sum_recreation(),
+        "max_recreation": sol.max_recreation(),
+    }
+    if weights is not None:
+        values["weighted_sum_recreation"] = sol.sum_recreation(weights)
+
+    def achieved(metric: str) -> float:
+        if metric == "sum_recreation" and weights is not None:
+            return values["weighted_sum_recreation"]
+        return values[metric]
+
+    slack: Dict[str, float] = {}
+    for c in spec.constraints:
+        got = achieved(c.metric)
+        slack[c.metric] = c.bound - got
+        tol = CONSTRAINT_TOL + 1e-9 * abs(c.bound)
+        if got > c.bound + tol:
+            raise ConstraintViolation(
+                f"solver {solver_name!r} returned {c.metric}={got!r} above "
+                f"the bound {c.bound!r} (slack {slack[c.metric]:.3g}) — "
+                f"this is a solver bug"
+            )
+
+    obj_metric = spec.objective.metric
+    if obj_metric == "every_recreation":
+        objective_value = values["sum_recreation"]
+    elif obj_metric == "sum_recreation" and weights is not None:
+        objective_value = values["weighted_sum_recreation"]
+    else:
+        objective_value = values[obj_metric]
+
+    return OptimizeResult(
+        solution=sol,
+        spec=spec,
+        problem=problem,
+        solver=solver_name,
+        backend_used=backend_used,
+        objective_value=objective_value,
+        objective_values=values,
+        constraint_slack=slack,
+        wall_time_s=time.monotonic() - t0,
+        diagnostics=diagnostics,
+    )

@@ -24,6 +24,13 @@ MCA), :mod:`.lmg` (Problems 3/5), :mod:`.mp` (Problems 4/6), :mod:`.last`,
 :mod:`.gith`, :mod:`.exact`.
 """
 
+class BackendUnsupported(ValueError):
+    """The requested compute backend cannot run this instance (e.g. the jax
+    dense padded layout would OOM on degree-skew graphs).  The NumPy path is
+    bit-identical by contract, so ``optimize`` catches this and falls back;
+    direct solver callers see it as the documented clear error."""
+
+
 # Shared numerical slacks.  The jax backend's bit-identity contract requires
 # both backends to apply *identical* tolerances in every relaxation and
 # feasibility check, so they live here rather than as per-module literals.

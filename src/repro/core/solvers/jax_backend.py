@@ -54,7 +54,7 @@ from jax.experimental import enable_x64
 
 from ...kernels.segment_ops import min_argmin_1d, segment_min_rows
 from ..edge_arrays import EdgeArrays
-from . import CONSTRAINT_TOL, EPS
+from . import CONSTRAINT_TOL, EPS, BackendUnsupported
 
 # the padded layouts are dense (rows × max_degree): refuse instances whose
 # degree skew would blow that up (a hub vertex that is delta-base for a
@@ -66,7 +66,7 @@ MAX_PADDED_CELLS = 1 << 25
 
 def _check_padded_size(nvp: int, width: int, what: str) -> None:
     if nvp * width > MAX_PADDED_CELLS:
-        raise ValueError(
+        raise BackendUnsupported(
             f"backend='jax' padded {what} layout would need {nvp}x{width} "
             f"cells (> {MAX_PADDED_CELLS}): instance degree skew too high "
             f"for the dense row padding — use backend='numpy' (bit-identical)"

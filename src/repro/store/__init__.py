@@ -16,6 +16,7 @@ from .materializer import (
     Materializer,
 )
 from .objectstore import Codec, ObjectStore
+from .repository import Ref, Repository, TreeDiff
 from .version_store import VersionMeta, VersionStore
 
 __all__ = [
@@ -23,6 +24,9 @@ __all__ = [
     "ObjectStore",
     "VersionStore",
     "VersionMeta",
+    "Repository",
+    "TreeDiff",
+    "Ref",
     "Materializer",
     "MaterializationCache",
     "CheckoutPlanner",

@@ -2,8 +2,12 @@
 
 Tracks a *version graph* (derivation DAG from commits/branches/merges) and a
 *storage graph* (what is physically stored: full objects and deltas), keeps
-the measured Δ/Φ matrices, and re-optimizes the storage graph on demand with
-any of the paper's solvers (``repack``).
+the measured Δ/Φ matrices, and re-optimizes the storage graph on demand
+against a declarative :class:`~repro.core.spec.OptimizeSpec` (``repack``;
+string solver names remain as a deprecated shim).  Named branches/tags and
+the git-shaped verb set live in the
+:class:`~repro.store.repository.Repository` facade; the ref table is
+persisted here, in the same atomic metadata file as the version metas.
 
 Commit path (online): a new version is stored as a delta against its first
 parent's payload when that is smaller than storing it whole — a cheap local
@@ -50,15 +54,18 @@ import hashlib
 import os
 import tempfile
 import time
+import warnings
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import msgpack
 
 from ..core import (
-    SOLVERS,
+    OptimizeSpec,
     StorageSolution,
     VersionGraph,
+    optimize,
+    spec_from_solver,
 )
 from .delta import (
     FlatTree,
@@ -150,6 +157,10 @@ class VersionStore:
         # re-measures pairs whose endpoints changed
         self._edge_cache: Dict[Tuple[int, int], Dict[str, Any]] = {}
         self.last_measured_edges = 0
+        # named refs (branches are mutable pointers, tags immutable) plus the
+        # current branch; owned by the Repository facade, persisted in the
+        # msgpack metadata so they survive a close/reopen like version metas
+        self.refs: Dict[str, Any] = {"branches": {}, "tags": {}, "head": "main"}
         # recreation layer: planner + byte-budgeted FlatTree LRU
         self.materializer = Materializer(self, budget_bytes=cache_budget_bytes)
         self.access_flush_every = access_flush_every
@@ -167,8 +178,13 @@ class VersionStore:
         *,
         parents: Sequence[int] = (),
         message: str = "",
+        update_branch: Optional[str] = None,
     ) -> int:
-        """Add a version; returns its id.  ``payload`` is any pytree."""
+        """Add a version; returns its id.  ``payload`` is any pytree.
+
+        ``update_branch`` points the named branch ref at the new version in
+        the same atomic metadata write as the commit itself (used by the
+        Repository facade — one rewrite per commit, never two)."""
         flat = flatten_payload(payload)
         raw = sum(a.nbytes for a in flat.values())
         vid = self._next_vid
@@ -205,6 +221,8 @@ class VersionStore:
             content_fp=hashlib.sha256(full_payload).hexdigest(),
         )
         self._storage_fp = None  # new triple => new storage-graph fingerprint
+        if update_branch is not None:
+            self.refs["branches"][update_branch] = vid
         self._save_meta()
         return vid
 
@@ -358,17 +376,52 @@ class VersionStore:
             self._save_meta()  # persist new measurements for the next call
         return g, provider
 
+    def access_weights(self) -> Dict[int, float]:
+        """Normalized access-frequency weights (Laplace-smoothed so an
+        unaccessed version still counts) — the workload signal for
+        ``repack(use_access_frequencies=True)``."""
+        total = sum(m.access_count + 1 for m in self.versions.values())
+        return {
+            v: (m.access_count + 1) / total for v, m in self.versions.items()
+        }
+
     def repack(
         self,
-        solver: str = "lmg",
+        spec: Union[OptimizeSpec, str] = "lmg",
         *,
         use_access_frequencies: bool = False,
         **solver_kwargs,
-    ) -> Dict[str, float]:
-        """Re-optimize the storage graph with one of the paper's solvers and
-        rewrite physical storage to match.  Returns before/after stats plus
-        ``gc_freed_bytes`` (orphaned object bytes reclaimed by the gc pass —
-        repack never leaves dangling objects behind)."""
+    ) -> Dict[str, Any]:
+        """Re-optimize the storage graph against an
+        :class:`~repro.core.spec.OptimizeSpec` and rewrite physical storage
+        to match.
+
+        ``use_access_frequencies=True`` routes the recorded access counts
+        into the spec's ``workload`` field; the spec must name a
+        workload-aware grid point (Problems 3 or 5 — LMG), anything else
+        raises instead of silently dropping the weights.
+
+        Passing a string solver name plus kwargs is the deprecated legacy
+        surface; it is mapped onto the equivalent spec via
+        :func:`~repro.core.problems.spec_from_solver`.
+
+        Returns before/after stats, ``gc_freed_bytes`` (orphaned object
+        bytes reclaimed by the gc pass — repack never leaves dangling
+        objects behind), and an ``optimize`` block recording the problem,
+        solver, and backend actually used.
+        """
+        if isinstance(spec, str):
+            warnings.warn(
+                "repack(solver: str, **kwargs) is deprecated; pass an "
+                "OptimizeSpec (repro.core.OptimizeSpec.problem(...))",
+                DeprecationWarning, stacklevel=2,
+            )
+            spec = spec_from_solver(spec, solver_kwargs)
+        elif solver_kwargs:
+            raise ValueError(
+                f"solver options go inside the OptimizeSpec; got stray "
+                f"kwarg(s) {sorted(solver_kwargs)}"
+            )
         if not self.versions:
             # nothing to repack: solvers need ≥1 version and the stats below
             # take max() over the version set
@@ -376,20 +429,23 @@ class VersionStore:
                     "max_recreation_s": 0.0}
             return {"before": dict(zero), "after": dict(zero),
                     "gc_freed_bytes": 0}
+        if use_access_frequencies:
+            if not spec.supports_workload():
+                raise ValueError(
+                    f"use_access_frequencies=True needs a workload-aware "
+                    f"spec (Problem 3 or 5 — LMG); got {spec.describe()!r}. "
+                    f"The chosen solver would silently ignore the recorded "
+                    f"access counts."
+                )
+            spec = spec.with_workload(self.access_weights())
         before = {
             "storage_bytes": self.storage_bytes(),
             "sum_recreation_s": sum(self.recreation_cost(v) for v in self.versions),
             "max_recreation_s": max(self.recreation_cost(v) for v in self.versions),
         }
         g, cache = self.build_cost_graph()
-        if use_access_frequencies and solver == "lmg":
-            total = sum(m.access_count + 1 for m in self.versions.values())
-            solver_kwargs["weights"] = {
-                v: (m.access_count + 1) / total for v, m in self.versions.items()
-            }
-        sol: StorageSolution = SOLVERS[solver](g, **solver_kwargs)
-        sol.validate()
-        self._apply_solution(sol, cache)
+        result = optimize(g, spec)
+        self._apply_solution(result.solution, cache)
         after = {
             "storage_bytes": self.storage_bytes(),
             "sum_recreation_s": sum(self.recreation_cost(v) for v in self.versions),
@@ -407,7 +463,18 @@ class VersionStore:
                 reverse=True,
             )[: self.prefetch_hot_k]
             self.materializer.prefetch(hot)
-        return {"before": before, "after": after, "gc_freed_bytes": freed}
+        return {
+            "before": before,
+            "after": after,
+            "gc_freed_bytes": freed,
+            "optimize": {
+                "problem": result.problem,
+                "solver": result.solver,
+                "backend": result.backend_used,
+                "objective_value": result.objective_value,
+                "wall_time_s": round(result.wall_time_s, 6),
+            },
+        }
 
     def _apply_solution(self, sol: StorageSolution, cache: _PayloadProvider) -> None:
         # phase 1: encode every chosen edge against the *old* storage graph
@@ -443,6 +510,14 @@ class VersionStore:
         return freed
 
     # ------------------------------------------------------------ metadata
+    def save_refs(self) -> None:
+        """Persist the ``refs`` dict (branches/tags/head) with the metadata.
+
+        Called by the :class:`~repro.store.repository.Repository` facade
+        after every ref mutation — refs live in the same atomic msgpack file
+        as version metas, so a close/reopen round-trips them."""
+        self._save_meta()
+
     def _save_meta(self) -> None:
         blob = msgpack.packb(
             {
@@ -452,6 +527,13 @@ class VersionStore:
                 },
                 "edge_cache": {
                     f"{a},{b}": ent for (a, b), ent in self._edge_cache.items()
+                },
+                "refs": {
+                    "branches": {
+                        name: vid for name, vid in self.refs["branches"].items()
+                    },
+                    "tags": {name: vid for name, vid in self.refs["tags"].items()},
+                    "head": self.refs["head"],
                 },
             },
             use_bin_type=True,
@@ -476,6 +558,14 @@ class VersionStore:
         for key, ent in obj.get("edge_cache", {}).items():
             a, b = key.split(",")
             self._edge_cache[(int(a), int(b))] = ent
+        refs = obj.get("refs") or {}
+        self.refs = {
+            "branches": {
+                str(k): int(v) for k, v in (refs.get("branches") or {}).items()
+            },
+            "tags": {str(k): int(v) for k, v in (refs.get("tags") or {}).items()},
+            "head": str(refs.get("head", "main")),
+        }
         self._storage_fp = None  # metadata replaced: recompute lazily
 
     # -------------------------------------------------------------- limits

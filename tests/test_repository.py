@@ -1,0 +1,285 @@
+"""Repository facade tests: ref semantics, persistence, diff, spec repack.
+
+* branch/tag resolution and shadowing rules, commit advancing the right
+  branch, merge commits with multi-ref parents;
+* ref persistence: branches/tags/head survive a store close/reopen (they
+  ride in the same atomic msgpack metadata as version metas);
+* ``checkout(ref)`` byte-identical to ``checkout(vid)`` on the underlying
+  store (same planner, same cache);
+* leaf-level ``diff``;
+* ``repack(spec)`` through the facade, including the
+  ``use_access_frequencies`` workload routing and its refusal mode.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import OptimizeSpec
+from repro.store import Repository, VersionStore
+
+
+def payload(seed: int, shape=(48, 32)):
+    rng = np.random.RandomState(seed)
+    return {
+        "w": rng.randn(*shape).astype(np.float32),
+        "b": rng.randn(shape[1]).astype(np.float32),
+    }
+
+
+class TestRefs:
+    def test_first_commit_creates_main(self, tmp_path):
+        repo = Repository(tmp_path)
+        assert repo.head == "main" and repo.branches() == {}
+        v1 = repo.commit(payload(0), message="base")
+        assert repo.branches() == {"main": v1}
+        assert repo.resolve() == v1
+        assert repo.resolve("main") == v1
+        assert repo.resolve(v1) == v1
+
+    def test_commit_advances_branch(self, tmp_path):
+        repo = Repository(tmp_path)
+        v1 = repo.commit(payload(0))
+        v2 = repo.commit(payload(1))
+        assert repo.branches() == {"main": v2}
+        assert repo.store.versions[v2].parents == [v1]
+
+    def test_branch_tag_resolution(self, tmp_path):
+        repo = Repository(tmp_path)
+        v1 = repo.commit(payload(0))
+        v2 = repo.commit(payload(1))
+        repo.branch("exp", at=v1)
+        repo.tag("rel", at="main")
+        assert repo.resolve("exp") == v1
+        assert repo.resolve("rel") == v2
+        v3 = repo.commit(payload(2), branch="exp")
+        assert repo.resolve("exp") == v3
+        assert repo.resolve("rel") == v2  # tags never move
+        assert repo.store.versions[v3].parents == [v1]
+
+    def test_duplicate_and_bad_refs(self, tmp_path):
+        repo = Repository(tmp_path)
+        repo.commit(payload(0))
+        repo.branch("exp")
+        repo.tag("rel")
+        with pytest.raises(ValueError, match="already exists"):
+            repo.branch("exp")
+        with pytest.raises(ValueError, match="immutable"):
+            repo.tag("rel")
+        with pytest.raises(ValueError, match="unknown ref"):
+            repo.resolve("nope")
+        with pytest.raises(ValueError, match="unknown version id"):
+            repo.resolve(999)
+        with pytest.raises(ValueError, match="ref names"):
+            repo.branch("123")
+
+    def test_switch_changes_head(self, tmp_path):
+        repo = Repository(tmp_path)
+        v1 = repo.commit(payload(0))
+        repo.branch("exp")
+        assert repo.switch("exp") == v1
+        v2 = repo.commit(payload(1))
+        assert repo.branches() == {"main": v1, "exp": v2}
+        with pytest.raises(ValueError, match="unknown branch"):
+            repo.switch("ghost")
+
+    def test_merge_commit_multi_ref_parents(self, tmp_path):
+        repo = Repository(tmp_path)
+        v1 = repo.commit(payload(0))
+        repo.branch("a", at=v1)
+        repo.branch("b", at=v1)
+        va = repo.commit(payload(1), branch="a")
+        vb = repo.commit(payload(2), branch="b")
+        vm = repo.commit(payload(3), parent=["a", "b"], branch="main")
+        assert repo.store.versions[vm].parents == [va, vb]
+        assert repo.resolve("main") == vm
+
+    def test_commit_to_unknown_branch_refuses_orphan(self, tmp_path):
+        repo = Repository(tmp_path)
+        v1 = repo.commit(payload(0))
+        with pytest.raises(ValueError, match="does not exist.*orphan"):
+            repo.commit(payload(1), branch="feture")  # typo'd branch name
+        assert repo.branches() == {"main": v1}
+        # explicit parent creates the branch there (git checkout -b style)
+        v2 = repo.commit(payload(1), branch="feature", parent="main")
+        assert repo.branches() == {"main": v1, "feature": v2}
+        assert repo.store.versions[v2].parents == [v1]
+
+    def test_commit_writes_metadata_once(self, tmp_path):
+        repo = Repository(tmp_path)
+        repo.commit(payload(0))
+        store = repo.store
+        writes = 0
+        orig = type(store)._save_meta
+
+        def counting(self_):
+            nonlocal writes
+            writes += 1
+            return orig(self_)
+
+        type(store)._save_meta = counting
+        try:
+            repo.commit(payload(1))
+        finally:
+            type(store)._save_meta = orig
+        assert writes == 1  # ref advance rides the commit's own write
+
+    def test_log_walks_ancestry(self, tmp_path):
+        repo = Repository(tmp_path)
+        v1 = repo.commit(payload(0))
+        v2 = repo.commit(payload(1))
+        repo.branch("exp", at=v1)
+        v3 = repo.commit(payload(2), branch="exp")
+        assert [m.vid for m in repo.log("main")] == [v2, v1]
+        assert [m.vid for m in repo.log("exp")] == [v3, v1]
+
+
+class TestPersistence:
+    def test_refs_survive_reopen(self, tmp_path):
+        repo = Repository(tmp_path)
+        v1 = repo.commit(payload(0), message="base")
+        v2 = repo.commit(payload(1), message="second")
+        repo.branch("exp", at=v1)
+        v3 = repo.commit(payload(2), branch="exp")
+        repo.tag("rel", at=v2)
+        repo.switch("exp")
+        repo.close()
+
+        repo2 = Repository(tmp_path)
+        assert repo2.branches() == {"main": v2, "exp": v3}
+        assert repo2.tags() == {"rel": v2}
+        assert repo2.head == "exp"
+        # and the raw store handle sees the same ref table
+        store = VersionStore(tmp_path)
+        assert store.refs["branches"] == {"main": v2, "exp": v3}
+        assert store.refs["tags"] == {"rel": v2}
+
+    def test_pre_refs_metadata_loads(self, tmp_path):
+        # stores written before the Repository facade have no refs block
+        store = VersionStore(tmp_path)
+        store.commit(payload(0), message="old-world")
+        blob = (tmp_path / "meta.msgpack").read_bytes()
+        import msgpack
+
+        obj = msgpack.unpackb(blob, raw=False)
+        obj.pop("refs", None)
+        (tmp_path / "meta.msgpack").write_bytes(
+            msgpack.packb(obj, use_bin_type=True)
+        )
+        repo = Repository(tmp_path)
+        assert repo.branches() == {} and repo.head == "main"
+        # refusing an implicit parentless commit: the store has history but
+        # no branch to anchor it, so the lineage must be given explicitly
+        with pytest.raises(ValueError, match="orphan"):
+            repo.commit(payload(1), message="new-world")
+        v2 = repo.commit(payload(1), message="new-world", parent=1)
+        assert repo.branches() == {"main": v2}
+        assert repo.store.versions[v2].parents == [1]
+
+
+class TestCheckout:
+    def test_checkout_ref_identical_to_vid(self, tmp_path):
+        repo = Repository(tmp_path)
+        vids = [repo.commit(payload(i)) for i in range(4)]
+        repo.tag("rel", at=vids[2])
+        by_ref = repo.checkout("rel")
+        by_vid = repo.store.checkout(vids[2])
+        assert set(by_ref) == set(by_vid)
+        for k in by_ref:
+            np.testing.assert_array_equal(by_ref[k], by_vid[k])
+
+    def test_checkout_many_mixed_refs(self, tmp_path):
+        repo = Repository(tmp_path)
+        vids = [repo.commit(payload(i)) for i in range(3)]
+        repo.tag("first", at=vids[0])
+        trees = repo.checkout_many(["first", vids[1], "main"])
+        singles = [repo.store.checkout(v) for v in vids]
+        for t, s in zip(trees, singles):
+            for k in s:
+                np.testing.assert_array_equal(t[k], s[k])
+
+    def test_diff(self, tmp_path):
+        repo = Repository(tmp_path)
+        p = payload(0)
+        repo.commit(p)
+        q = {k: v.copy() for k, v in p.items()}
+        q["w"][:4] += 1.0
+        del q["b"]
+        q["extra"] = np.ones(7, np.float32)
+        repo.commit(q)
+        d = repo.diff(1, "main")
+        assert d.added == ("extra",) and d.removed == ("b",)
+        assert d.changed == ("w",) and d.unchanged == 0
+        assert d.bytes_changed == q["w"].nbytes
+        assert "v1..v2" in d.summary()
+        # identical refs diff empty
+        d0 = repo.diff("main", "main")
+        assert d0.added == () and d0.changed == () and d0.unchanged == 2
+
+
+class TestRepackThroughFacade:
+    def test_spec_repack_preserves_contents(self, tmp_path):
+        repo = Repository(tmp_path)
+        vids = [repo.commit(payload(i)) for i in range(5)]
+        repo.tag("rel", at=vids[-1])
+        originals = {v: repo.store.checkout(v) for v in vids}
+        stats = repo.repack(OptimizeSpec.problem(2))
+        assert stats["optimize"]["problem"] == 2
+        assert all(m.stored_base is None for m in repo.store.log())
+        for v in vids:
+            rec = repo.checkout(v)
+            for k in originals[v]:
+                np.testing.assert_array_equal(rec[k], originals[v][k])
+        # refs unaffected by repack
+        assert repo.resolve("rel") == vids[-1]
+
+    def test_use_access_frequencies_routing(self, tmp_path):
+        repo = Repository(tmp_path)
+        for i in range(4):
+            repo.commit(payload(i))
+        for _ in range(5):
+            repo.checkout("main")
+        beta = repo.store.storage_bytes() * 2.0
+        stats = repo.repack(
+            OptimizeSpec.problem(3, beta=beta), use_access_frequencies=True
+        )
+        assert stats["optimize"]["solver"] == "lmg"
+        # non-workload specs refuse instead of dropping the counts
+        with pytest.raises(ValueError, match="workload-aware"):
+            repo.repack(OptimizeSpec.problem(2), use_access_frequencies=True)
+        with pytest.raises(ValueError, match="workload-aware"):
+            repo.repack("mca", use_access_frequencies=True)
+
+    def test_problem5_spec_honors_workload(self, tmp_path):
+        # Problem 5 (min C s.t. Σ w_i R_i ≤ θ) was unreachable through the
+        # legacy string registry; the spec surface reaches it and routes the
+        # access-frequency workload into the bound
+        repo = Repository(tmp_path)
+        for i in range(5):
+            repo.commit(payload(i))
+        g, _ = repo.store.build_cost_graph()
+        from repro.core import optimize
+
+        spt_sum = optimize(g, OptimizeSpec.problem(2)).objective_values[
+            "sum_recreation"
+        ]
+        stats = repo.repack(
+            OptimizeSpec.problem(5, theta=spt_sum * 2.0),
+            use_access_frequencies=True,
+        )
+        assert stats["optimize"]["problem"] == 5
+        assert stats["optimize"]["solver"] == "lmg+binsearch"
+
+    def test_stray_kwargs_with_spec_rejected(self, tmp_path):
+        repo = Repository(tmp_path)
+        repo.commit(payload(0))
+        with pytest.raises(ValueError, match="stray"):
+            repo.repack(OptimizeSpec.problem(2), theta=1.0)
+
+    def test_constructor_arg_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="exactly one"):
+            Repository()
+        with pytest.raises(ValueError, match="exactly one"):
+            Repository(tmp_path, store=VersionStore(tmp_path))
+        store = VersionStore(tmp_path / "s")
+        repo = Repository(store=store)
+        assert repo.store is store

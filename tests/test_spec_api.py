@@ -1,0 +1,375 @@
+"""Declarative spec API tests.
+
+* Bit-identity property: ``optimize(g, OptimizeSpec.problem(n, ...))``
+  returns exactly the same tree and float costs as the corresponding
+  legacy ``solve_problemN`` entry point, for all six paper problems across
+  the 56-instance random suite of ``test_array_refactor``.
+* Spec construction/validation: off-grid combinations, duplicate or
+  objective-shadowing constraints, workload routing, hashability.
+* Dispatch failure modes: unknown solver names and unsupported kwargs
+  raise ``ValueError`` naming the offender and the accepted set (never a
+  bare ``KeyError``/``TypeError``).
+* Backend fallbacks: degree-skew jax instances transparently take the
+  NumPy path, recorded in the result diagnostics.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Constraint,
+    Objective,
+    OptimizeSpec,
+    SOLVERS,
+    VersionGraph,
+    optimize,
+    run_solver,
+    solve_problem1,
+    solve_problem2,
+    solve_problem3,
+    solve_problem4,
+    solve_problem5,
+    solve_problem6,
+    spec_from_solver,
+    zipf_weights,
+)
+from test_array_refactor import _instances
+
+
+@pytest.fixture(scope="module")
+def instances():
+    return _instances()
+
+
+# ---------------------------------------------------- bit-identity property
+class TestOptimizeMatchesLegacyEntryPoints:
+    """optimize(g, spec) ≡ solve_problemN on the full 56-instance suite."""
+
+    def test_instance_count(self, instances):
+        assert len(instances) >= 50
+
+    def test_problem1(self, instances):
+        for g in instances:
+            ref = solve_problem1(g)
+            res = optimize(g, OptimizeSpec.problem(1))
+            assert res.problem == 1
+            assert res.solution.parent == ref.parent
+            assert res.objective_value == ref.storage_cost()
+
+    def test_problem2(self, instances):
+        for g in instances:
+            ref = solve_problem2(g)
+            res = optimize(g, OptimizeSpec.problem(2))
+            assert res.problem == 2
+            assert res.solution.parent == ref.parent
+            assert res.solution.recreation_costs() == ref.recreation_costs()
+
+    def test_problem3(self, instances):
+        for g in instances:
+            beta = solve_problem1(g).storage_cost() * 1.2
+            ref = solve_problem3(g, beta)
+            res = optimize(g, OptimizeSpec.problem(3, beta=beta))
+            assert res.problem == 3
+            assert res.solution.parent == ref.parent
+            assert res.objective_value == ref.sum_recreation()
+            assert res.constraint_slack["storage"] >= -1e-9
+
+    def test_problem4(self, instances):
+        for g in instances:
+            beta = solve_problem1(g).storage_cost() * 1.3
+            ref = solve_problem4(g, beta)
+            res = optimize(g, OptimizeSpec.problem(4, beta=beta))
+            assert res.problem == 4
+            assert res.solution.parent == ref.parent
+            assert res.objective_value == ref.max_recreation()
+
+    def test_problem5(self, instances):
+        for g in instances:
+            theta = 0.5 * (
+                solve_problem1(g).sum_recreation()
+                + solve_problem2(g).sum_recreation()
+            )
+            ref = solve_problem5(g, theta)
+            res = optimize(g, OptimizeSpec.problem(5, theta=theta))
+            assert res.problem == 5
+            assert res.solution.parent == ref.parent
+            assert res.objective_value == ref.storage_cost()
+
+    def test_problem6(self, instances):
+        for g in instances:
+            theta = solve_problem2(g).max_recreation() * 1.5
+            ref = solve_problem6(g, theta)
+            res = optimize(g, OptimizeSpec.problem(6, theta=theta))
+            assert res.problem == 6
+            assert res.solution.parent == ref.parent
+            assert res.objective_value == ref.storage_cost()
+
+    def test_workload_aware_parity(self, instances):
+        # Problems 3 and 5 route the spec workload to the solver's weights
+        for g in instances[:6]:
+            w = zipf_weights(g.n, seed=5)
+            beta = solve_problem1(g).storage_cost() * 1.25
+            ref = solve_problem3(g, beta, weights=w)
+            res = optimize(g, OptimizeSpec.problem(3, beta=beta, workload=w))
+            assert res.solution.parent == ref.parent
+            assert res.objective_value == ref.sum_recreation(w)
+
+    def test_explicit_grid_point_equals_problem_constructor(self, instances):
+        g = instances[0]
+        beta = solve_problem1(g).storage_cost() * 1.2
+        by_parts = OptimizeSpec(
+            objective=Objective.sum_recreation(),
+            constraints=(Constraint.storage_at_most(beta),),
+        )
+        assert by_parts == OptimizeSpec.problem(3, beta=beta)
+        assert (
+            optimize(g, by_parts).solution.parent
+            == optimize(g, OptimizeSpec.problem(3, beta=beta)).solution.parent
+        )
+
+    def test_heuristic_specs(self, instances):
+        from repro.core import git_heuristic, last_tree
+
+        g = instances[1]
+        res = optimize(g, OptimizeSpec.heuristic("gith", window=7, max_depth=9))
+        assert res.problem is None and res.solver == "gith"
+        assert res.solution.parent == git_heuristic(g, window=7, max_depth=9).parent
+        res = optimize(g, OptimizeSpec.heuristic("last", alpha=2.0))
+        assert res.solution.parent == last_tree(g, 2.0).parent
+
+
+# ----------------------------------------------------------- spec validation
+class TestSpecValidation:
+    def test_off_grid_combinations_rejected(self):
+        with pytest.raises(ValueError, match="off the paper grid"):
+            OptimizeSpec(
+                objective=Objective.max_recreation(),
+                constraints=(Constraint.sum_recreation_at_most(1.0),),
+            )
+        with pytest.raises(ValueError, match="off the paper grid"):
+            OptimizeSpec(objective=Objective.sum_recreation())
+
+    def test_objective_cannot_be_constrained(self):
+        with pytest.raises(ValueError, match="cannot also be constrained"):
+            OptimizeSpec(
+                objective=Objective.storage(),
+                constraints=(Constraint.storage_at_most(10.0),),
+            )
+
+    def test_duplicate_constraints_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            OptimizeSpec(
+                objective=Objective.sum_recreation(),
+                constraints=(
+                    Constraint.storage_at_most(1.0),
+                    Constraint.storage_at_most(2.0),
+                ),
+            )
+
+    def test_unknown_metric_and_nonfinite_bound(self):
+        with pytest.raises(ValueError, match="objective metric"):
+            Objective("speed")
+        with pytest.raises(ValueError, match="constraint metric"):
+            Constraint("speed", 1.0)
+        with pytest.raises(ValueError, match="finite"):
+            Constraint.storage_at_most(float("inf"))
+
+    def test_workload_only_on_lmg_problems(self):
+        for n, kw in ((1, {}), (2, {}), (4, {"beta": 1.0}), (6, {"theta": 1.0})):
+            with pytest.raises(ValueError, match="workload"):
+                OptimizeSpec.problem(n, workload={1: 1.0}, **kw)
+        # 3 and 5 accept it
+        assert OptimizeSpec.problem(3, beta=1.0, workload={1: 1.0}).supports_workload()
+        assert OptimizeSpec.problem(5, theta=1.0, workload={1: 1.0}).supports_workload()
+
+    def test_problem_constructor_bounds(self):
+        with pytest.raises(ValueError, match="requires beta"):
+            OptimizeSpec.problem(3)
+        with pytest.raises(ValueError, match="requires theta"):
+            OptimizeSpec.problem(6)
+        with pytest.raises(ValueError, match="does not take"):
+            OptimizeSpec.problem(1, beta=1.0)
+        with pytest.raises(ValueError, match="1..6"):
+            OptimizeSpec.problem(7)
+
+    def test_specs_are_hashable_and_equal(self):
+        a = OptimizeSpec.problem(3, beta=5.0, workload={2: 0.25, 1: 0.75})
+        b = OptimizeSpec.problem(3, beta=5.0, workload={1: 0.75, 2: 0.25})
+        assert a == b and hash(a) == hash(b)
+        assert a.weights() == {1: 0.75, 2: 0.25}
+        assert hash(a) != hash(OptimizeSpec.problem(3, beta=6.0))
+
+    def test_specs_hash_with_unhashable_options(self):
+        # precomputed base/spt trees are legal options (benchmarks pass
+        # them); they must not break the spec's hashable contract
+        g = VersionGraph(2)
+        g.set_materialization(1, 10, 10)
+        g.set_materialization(2, 12, 12)
+        g.set_delta(1, 2, 3, 3)
+        mst = solve_problem1(g)
+        a = OptimizeSpec.problem(3, beta=100.0, base=mst, spt=solve_problem2(g))
+        b = OptimizeSpec.problem(3, beta=100.0, base=mst, spt=solve_problem2(g))
+        assert isinstance(hash(a), int) and hash(a) == hash(b)
+        assert optimize(g, a).solution.parent == solve_problem3(g, 100.0).parent
+
+    def test_heuristic_solver_validation(self):
+        with pytest.raises(ValueError, match="forcible heuristic"):
+            OptimizeSpec(objective=Objective.storage(), solver="mp")
+        with pytest.raises(ValueError, match="no constraints"):
+            OptimizeSpec(
+                objective=Objective.storage(),
+                constraints=(Constraint.max_recreation_at_most(1.0),),
+                solver="gith",
+            )
+
+    def test_unknown_backend(self):
+        with pytest.raises(ValueError, match="backend"):
+            OptimizeSpec.problem(1, backend="torch")
+
+    def test_unknown_option_rejected_at_optimize(self):
+        g = VersionGraph(1)
+        g.set_materialization(1, 10, 10)
+        with pytest.raises(ValueError, match="option"):
+            optimize(g, OptimizeSpec.problem(1, frobnicate=3))
+
+
+# ------------------------------------------------------- dispatch failure UX
+class TestSolverDispatch:
+    def _g(self):
+        g = VersionGraph(2)
+        g.set_materialization(1, 10, 10)
+        g.set_materialization(2, 12, 12)
+        g.set_delta(1, 2, 3, 3)
+        return g
+
+    def test_unknown_solver_name(self):
+        g = self._g()
+        with pytest.raises(ValueError, match=r"unknown solver 'quantum'.*accepted"):
+            run_solver("quantum", g)
+        # the registry itself explains misses too (no bare KeyError)
+        with pytest.raises(ValueError, match=r"unknown solver 'quantum'.*accepted"):
+            SOLVERS["quantum"]
+
+    def test_unsupported_kwarg_named(self):
+        g = self._g()
+        with pytest.raises(ValueError, match=r"'mp'.*\['frobnicate'\].*accepted"):
+            run_solver("mp", g, theta=100.0, frobnicate=1)
+        with pytest.raises(ValueError, match=r"'gith'.*\['alpha'\]"):
+            SOLVERS["gith"](g, alpha=2.0)
+
+    def test_missing_required_kwarg_named(self):
+        g = self._g()
+        with pytest.raises(ValueError, match=r"'lmg' requires.*budget"):
+            run_solver("lmg", g)
+        with pytest.raises(ValueError, match=r"'mp' requires.*theta"):
+            SOLVERS["mp"](g)
+
+    def test_valid_dispatch_still_works(self):
+        g = self._g()
+        sol = run_solver("mca", g)
+        assert sol.parent == {1: 0, 2: 1}
+        sol = SOLVERS["lmg"](g, budget=1e9)
+        sol.validate()
+
+    def test_spec_from_solver_roundtrip(self):
+        g = self._g()
+        spec = spec_from_solver("mp", {"theta": 100.0})
+        assert spec == OptimizeSpec.problem(6, theta=100.0)
+        spec = spec_from_solver("lmg", {"budget": 50.0, "weights": {1: 1.0}})
+        assert spec.problem_id() == 3 and spec.weights() == {1: 1.0}
+        spec = spec_from_solver("gith", {"window": 3})
+        assert spec.solver == "gith" and spec.options_dict() == {"window": 3}
+        with pytest.raises(ValueError, match="unknown solver"):
+            spec_from_solver("quantum", {})
+        with pytest.raises(ValueError, match="does not accept"):
+            spec_from_solver("spt", {"theta": 1.0})
+        # a delta-weighted SPT is not a grid point: refuse, don't drop
+        with pytest.raises(ValueError, match="phi"):
+            spec_from_solver("spt", {"weight": "delta"})
+        assert spec_from_solver("spt", {"weight": "phi"}) == OptimizeSpec.problem(2)
+
+
+# --------------------------------------------------------- backend fallbacks
+class TestBackendFallbacks:
+    def test_degree_skew_falls_back_to_numpy(self):
+        # hub vertex whose out-degree would blow up the dense padded out-row
+        # layout of the jitted MP: optimize takes the bit-identical CSR host
+        # path instead of raising (same instance as the jax-backend guard
+        # test, which asserts the *solver* still refuses loudly)
+        from repro.core.solvers import jax_backend
+
+        n = 8192
+        g = VersionGraph(n, directed=True)
+        ids = np.arange(1, n + 1, dtype=np.int64)
+        ones = np.ones(n, dtype=np.float64)
+        g.add_edges_bulk(np.zeros(n, dtype=np.int64), ids, 100 * ones, ones)
+        hub_dst = ids[1:]  # vertex 1 -> everyone else
+        g.add_edges_bulk(
+            np.full(n - 1, 1, dtype=np.int64), hub_dst, ones[1:], ones[1:],
+        )
+        assert 16384 * hub_dst.shape[0] > jax_backend.MAX_PADDED_CELLS
+        # direct solver callers get the typed refusal...
+        from repro.core.solvers import BackendUnsupported
+
+        with pytest.raises(BackendUnsupported, match="degree skew"):
+            run_solver("mp", g, theta=1e9, backend="jax")
+        # ...optimize() falls back transparently and records it
+        res = optimize(g, OptimizeSpec.problem(6, theta=1e9, backend="jax"))
+        assert res.backend_used == "numpy"
+        assert "degree skew" in res.diagnostics["backend_fallback"]
+        ref = solve_problem6(g, 1e9)
+        assert res.solution.parent == ref.parent
+
+    def test_directed_mca_records_host_path(self, ):
+        g = VersionGraph(3, directed=True)
+        for i in range(1, 4):
+            g.set_materialization(i, 100.0 * i, 100.0 * i)
+        g.set_delta(1, 2, 5, 5)
+        g.set_delta(2, 3, 7, 7)
+        res = optimize(g, OptimizeSpec.problem(1, backend="jax"))
+        assert res.backend_used == "numpy"
+        assert "Edmonds" in res.diagnostics["backend_fallback"]
+        assert res.solution.parent == solve_problem1(g).parent
+
+    def test_jax_backend_parity_through_specs(self):
+        from repro.core import generate, dc_like
+
+        g = generate(dc_like(60, seed=3)).graph
+        a = optimize(g, OptimizeSpec.problem(2))
+        b = optimize(g, OptimizeSpec.problem(2, backend="jax"))
+        assert b.backend_used == "jax" and not b.diagnostics
+        assert a.solution.parent == b.solution.parent
+        assert a.objective_value == b.objective_value
+
+
+# --------------------------------------------------------------- result shape
+class TestOptimizeResult:
+    def test_result_fields(self):
+        from repro.core import generate, dc_like
+
+        g = generate(dc_like(40, seed=2)).graph
+        beta = solve_problem1(g).storage_cost() * 1.3
+        res = optimize(g, OptimizeSpec.problem(3, beta=beta))
+        assert res.solver == "lmg" and res.backend_used == "numpy"
+        assert set(res.objective_values) == {
+            "storage", "sum_recreation", "max_recreation",
+        }
+        assert res.constraint_slack["storage"] == pytest.approx(
+            beta - res.objective_values["storage"]
+        )
+        assert res.wall_time_s >= 0
+        assert "P3" in res.summary()
+
+    def test_optimize_rejects_strings(self):
+        g = VersionGraph(1)
+        g.set_materialization(1, 1, 1)
+        with pytest.raises(TypeError, match="OptimizeSpec"):
+            optimize(g, "lmg")
+
+    def test_infeasible_bounds_still_raise(self):
+        from repro.core import InfeasibleError, generate, dc_like
+
+        g = generate(dc_like(30, seed=1)).graph
+        tight = solve_problem2(g).max_recreation() * 0.5
+        with pytest.raises(InfeasibleError):
+            optimize(g, OptimizeSpec.problem(6, theta=tight))
