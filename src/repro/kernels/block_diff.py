@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from . import PALLAS_INTERPRET
+
 DEFAULT_ROWS_PER_PROGRAM = 256
 
 
@@ -31,7 +33,7 @@ def changed_block_mask(
     b: jnp.ndarray,
     *,
     rows_per_program: int = DEFAULT_ROWS_PER_PROGRAM,
-    interpret: bool = True,
+    interpret: bool = PALLAS_INTERPRET,
 ) -> jnp.ndarray:
     """(num_blocks, 1) int32 mask of blocks where ``a`` and ``b`` differ."""
     assert a.shape == b.shape and a.dtype == b.dtype == jnp.int32
@@ -69,7 +71,7 @@ def block_hash(
     coef: jnp.ndarray,
     *,
     rows_per_program: int = DEFAULT_ROWS_PER_PROGRAM,
-    interpret: bool = True,
+    interpret: bool = PALLAS_INTERPRET,
 ) -> jnp.ndarray:
     """(num_blocks, 1) int32 position-weighted hash per 4 KiB block."""
     assert x.dtype == jnp.int32 and coef.shape == x.shape[1:]

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from . import PALLAS_INTERPRET
+
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_K = 512
 NEG_INF = -0.7 * float(np.finfo(np.float32).max)
@@ -102,7 +104,7 @@ def flash_attention(
     softmax_scale: Optional[float] = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
-    interpret: bool = True,
+    interpret: bool = PALLAS_INTERPRET,
 ) -> jnp.ndarray:
     B, Sq, H, hd = q.shape
     _, Sk, KV, hd_v = v.shape

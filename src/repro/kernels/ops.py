@@ -12,9 +12,9 @@ operations the store uses:
   (Pallas).  Capacity is rounded up to a power of two so jit recompiles stay
   bounded when the number of changed blocks varies between commits.
 
-On this CPU container all kernels run with ``interpret=True`` (the kernel
-body executes under the Pallas interpreter); on TPU the same call sites flip
-``interpret=False``.
+Interpret mode is governed by the package-level
+:data:`repro.kernels.PALLAS_INTERPRET` knob (``REPRO_PALLAS_INTERPRET`` env
+var): interpret on this CPU container, compiled Mosaic on real TPU backends.
 """
 
 from __future__ import annotations
@@ -27,12 +27,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import PALLAS_INTERPRET
 from .block_diff import block_hash, changed_block_mask, hash_coefficients
+from .chain_apply import chain_delta_apply, chain_delta_apply_batched
 from .ref import BLOCK_BYTES, BLOCK_ELEMS
 from .sparse_apply import sparse_delta_apply
 from .xor_delta import xor_delta
 
-INTERPRET = True  # flipped to False on real TPU backends
+INTERPRET = PALLAS_INTERPRET  # single env-controlled knob for all kernels
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,13 +86,12 @@ def xor_apply(base_blocks: jnp.ndarray, delta_blocks: jnp.ndarray) -> jnp.ndarra
 
 
 # ---------------------------------------------------------------- block hash
-_COEF = None
+# initialized at import: the concurrent serving tier calls block_hashes from
+# multiple threads, and a lazily-assigned global would race on first use
+_COEF = jnp.asarray(hash_coefficients())
 
 
 def block_hashes(blocks: jnp.ndarray) -> jnp.ndarray:
-    global _COEF
-    if _COEF is None:
-        _COEF = jnp.asarray(hash_coefficients())
     return block_hash(blocks, _COEF, interpret=INTERPRET)[:, 0]
 
 
@@ -144,10 +145,15 @@ def sparse_encode(
     """
     mask = changed_block_mask(base_blocks, new_blocks, interpret=INTERPRET)
     if capacity is None:
-        n_changed = int(jnp.sum(mask[:, 0]))
-        capacity = _round_capacity(max(1, n_changed))
-    idx, blocks, n = _compact(mask, new_blocks, capacity)
-    n = int(n)
+        # one device→host sync on the commit path: the mask sum both sizes
+        # the capacity and *is* the changed count, so _compact's (identical)
+        # device-side count is never materialized host-side
+        n = int(jnp.sum(mask[:, 0]))
+        capacity = _round_capacity(max(1, n))
+        idx, blocks, _ = _compact(mask, new_blocks, capacity)
+        return idx, blocks, n
+    idx, blocks, n_dev = _compact(mask, new_blocks, capacity)
+    n = int(n_dev)
     if n > capacity:
         raise ValueError(
             f"sparse_encode capacity overflow: {n} changed blocks exceed "
@@ -161,3 +167,22 @@ def sparse_apply(
     base_blocks: jnp.ndarray, packed_blocks: jnp.ndarray, idx: jnp.ndarray
 ) -> jnp.ndarray:
     return sparse_delta_apply(base_blocks, packed_blocks, idx, interpret=INTERPRET)
+
+
+# ------------------------------------------------------------- chain apply
+def chain_apply(
+    base_blocks: jnp.ndarray, packed_blocks: jnp.ndarray, idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused K-step chain application (see :mod:`.chain_apply`): ``idx`` /
+    ``packed_blocks`` stack K packed sparse deltas in chain order, flat or
+    ``(K, capacity)``-shaped, padding ``idx < 0``."""
+    return chain_delta_apply(base_blocks, packed_blocks, idx, interpret=INTERPRET)
+
+
+def chain_apply_batched(
+    base_stack: jnp.ndarray, packed_blocks: jnp.ndarray, idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused chain application for L same-sized leaves in one launch."""
+    return chain_delta_apply_batched(
+        base_stack, packed_blocks, idx, interpret=INTERPRET
+    )

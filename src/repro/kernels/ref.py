@@ -58,3 +58,22 @@ def sparse_delta_apply_ref(
     # out-of-bounds row so mode="drop" actually drops it.
     safe = jnp.where(idx < 0, base.shape[0], idx)
     return base.at[safe].set(blocks, mode="drop")
+
+
+def chain_delta_apply_ref(
+    base: jnp.ndarray, blocks: jnp.ndarray, idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Stepwise oracle for the fused chain kernel: apply each step's packed
+    delta in chain order (later steps overwrite earlier — the sparse deltas
+    carry new block *content*, so composition is last-writer-wins).
+
+    base   : (num_blocks, 8, 128) int32
+    blocks : (K, capacity, 8, 128) int32 (or flat (S, 8, 128))
+    idx    : (K, capacity) int32 (or flat (S,)); negative = padding
+    """
+    idx2 = idx.reshape(-1, 1) if idx.ndim == 1 else idx
+    blocks2 = blocks.reshape(idx2.shape + (8, 128))
+    out = base
+    for k in range(idx2.shape[0]):
+        out = sparse_delta_apply_ref(out, blocks2[k], idx2[k])
+    return out

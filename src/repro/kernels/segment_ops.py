@@ -32,10 +32,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import PALLAS_INTERPRET
+
 DEFAULT_ROWS_PER_PROGRAM = 256
 LANE = 128  # pad the minor dim to the TPU lane width
 
-INTERPRET = True  # flipped to False on real TPU backends
+INTERPRET = PALLAS_INTERPRET  # REPRO_PALLAS_INTERPRET env knob (kernels pkg)
 
 
 def _min_kernel(x_ref, o_ref):

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import PALLAS_INTERPRET
+
 
 def _apply_kernel(idx_ref, base_ref, blocks_ref, o_ref):
     i = pl.program_id(0)
@@ -34,7 +36,7 @@ def sparse_delta_apply(
     blocks: jnp.ndarray,
     idx: jnp.ndarray,
     *,
-    interpret: bool = True,
+    interpret: bool = PALLAS_INTERPRET,
 ) -> jnp.ndarray:
     """Scatter ``blocks[k]`` into ``base[idx[k]]``; idx<0 rows are padding.
 

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import PALLAS_INTERPRET
+
 DEFAULT_ROWS_PER_PROGRAM = 256  # 256 blocks × 4 KiB × 3 streams = 3 MiB VMEM
 
 
@@ -31,7 +33,7 @@ def xor_delta(
     b: jnp.ndarray,
     *,
     rows_per_program: int = DEFAULT_ROWS_PER_PROGRAM,
-    interpret: bool = True,
+    interpret: bool = PALLAS_INTERPRET,
 ) -> jnp.ndarray:
     """a ^ b over (num_blocks, 8, 128) int32 block arrays."""
     assert a.shape == b.shape and a.dtype == b.dtype == jnp.int32, (a.shape, a.dtype)

@@ -2,8 +2,13 @@
 storage-graph optimization via the paper's solvers."""
 
 from .delta import (
+    DeltaWire,
     RecreationCostModel,
+    SparseLeafDelta,
     apply_delta,
+    apply_delta_chain,
+    apply_delta_chains,
+    decode_delta_wire,
     decode_full,
     encode_delta,
     encode_full,
@@ -37,4 +42,9 @@ __all__ = [
     "decode_full",
     "encode_delta",
     "apply_delta",
+    "apply_delta_chain",
+    "apply_delta_chains",
+    "decode_delta_wire",
+    "DeltaWire",
+    "SparseLeafDelta",
 ]

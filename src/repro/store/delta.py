@@ -13,12 +13,33 @@ Wire format is msgpack; zstd happens in the object store.  The codec also
 returns the *measured* Δ (serialized bytes) and a Φ estimate from
 :class:`RecreationCostModel` — these feed the paper's cost matrices, keeping
 Δ and Φ genuinely distinct quantities (Scenario 3: Φ ≠ Δ).
+
+Blocked-layout + chain-fusion contract
+--------------------------------------
+A leaf's bytes are viewed as ``(num_blocks, 8, 128)`` int32 — one 4 KiB
+storage block per TPU VMEM tile (:func:`repro.kernels.ops.to_blocks`).  A
+sparse wire entry stores the *new content* of each changed block plus its
+row index, with ``_compact``'s device-side padding trimmed before
+serialization; padding is reintroduced at decode time as ``idx = -1`` slots.
+
+Because sparse entries carry content (not XOR), a K-step chain composes by
+**last-writer-wins per block row**, which :func:`apply_delta_chain` exploits:
+the chain's packed deltas are flattened *in chain order* into one padded
+device stack and applied in a single fused Pallas dispatch
+(:mod:`repro.kernels.chain_apply`), bit-identical to K sequential
+:func:`apply_delta` calls.  Per-leaf slot counts are bucketed to powers of
+two (min 8) and leaves with equal ``(num_blocks, slot_bucket)`` are batched
+into one kernel launch, so jit caches are shared across chains of different
+lengths and sparsity — the same shape-bucketing discipline as
+``core/solvers/jax_backend.py``.  A leaf's chain segment restarts at any
+mid-chain full rewrite (shape/dtype change) and ends at a tombstone; only
+the segments between those events reach the kernel.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +50,12 @@ from ..kernels import ops
 from ..kernels.ref import BLOCK_BYTES
 
 FlatTree = Dict[str, np.ndarray]
+# device-resident companion of a FlatTree: blocked form + layout meta per
+# leaf (only leaves that went through the block pipeline appear)
+BlockedLeaf = Tuple[jnp.ndarray, "ops.BlockMeta"]
+BlockedTree = Dict[str, BlockedLeaf]
+
+_SLOT_BUCKET_MIN = 8
 
 
 def flatten_payload(tree: Any) -> FlatTree:
@@ -112,31 +139,230 @@ def encode_delta(base: FlatTree, new: FlatTree) -> Tuple[bytes, Dict]:
     return payload, stats
 
 
-def apply_delta(base: FlatTree, payload: bytes) -> FlatTree:
+# ------------------------------------------------------------- wire decode
+@dataclasses.dataclass(frozen=True)
+class SparseLeafDelta:
+    """One leaf's packed sparse delta, trimmed (no padding slots)."""
+
+    idx: np.ndarray      # (n,) int32 changed block rows
+    blocks: np.ndarray   # (n, 8, 128) int32 packed new block content
+    n: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaWire:
+    """A decoded delta payload: msgpack unpacked once, arrays zero-copy views
+    ready for device upload (the decode path of the fused chain pipeline)."""
+
+    sparse: Dict[str, SparseLeafDelta]
+    full: Dict[str, Dict]          # raw wire dicts, decoded lazily
+    tombstones: FrozenSet[str]
+
+
+def decode_delta_wire(payload: bytes) -> DeltaWire:
+    """Unpack a delta payload into :class:`DeltaWire` (no block application)."""
     obj = msgpack.unpackb(payload, raw=False)
     assert obj["kind"] == "delta", obj["kind"]
-    tombstones = set(obj["tombstones"])  # O(1) lookup per leaf, not O(T)
+    sparse: Dict[str, SparseLeafDelta] = {}
+    for key, d in obj["sparse"].items():
+        n = int(d["n"])
+        if n == 0:
+            sparse[key] = SparseLeafDelta(
+                np.empty((0,), np.int32), np.empty((0, 8, 128), np.int32), 0
+            )
+            continue
+        idx = np.frombuffer(d["idx"], np.int32)
+        blocks = np.frombuffer(d["blocks"], np.int32).reshape(-1, 8, 128)
+        sparse[key] = SparseLeafDelta(idx, blocks, n)
+    return DeltaWire(sparse, obj["full"], frozenset(obj["tombstones"]))
+
+
+def apply_delta(base: FlatTree, payload: Union[bytes, DeltaWire]) -> FlatTree:
+    """Stepwise (one-hop) delta application — the reference recreation path.
+
+    Unchanged leaves pass through by reference; each changed leaf pays one
+    ``to_blocks``/``sparse_apply``/``from_blocks`` round trip.  Chains should
+    use :func:`apply_delta_chain`, which is bit-identical and fused.
+    """
+    wire = decode_delta_wire(payload) if isinstance(payload, bytes) else payload
     out: FlatTree = {}
     for key, arr in base.items():
-        if key in tombstones:
+        if key in wire.tombstones:
             continue
-        d = obj["sparse"].get(key)
-        if d is None:
-            out[key] = arr
-            continue
-        if d["n"] == 0:
+        d = wire.sparse.get(key)
+        if d is None or d.n == 0:
             out[key] = arr
             continue
         bb, meta = ops.to_blocks(jnp.asarray(arr))
-        idx = jnp.asarray(np.frombuffer(d["idx"], np.int32))
-        blocks = jnp.asarray(
-            np.frombuffer(d["blocks"], np.int32).reshape(-1, 8, 128)
-        )
-        rec = ops.sparse_apply(bb, blocks, idx)
+        rec = ops.sparse_apply(bb, jnp.asarray(d.blocks), jnp.asarray(d.idx))
         out[key] = np.asarray(ops.from_blocks(rec, meta))
-    for key, wire in obj["full"].items():
-        out[key] = _arr_from_wire(wire)
+    for key, wire_dict in wire.full.items():
+        out[key] = _arr_from_wire(wire_dict)
     return out
+
+
+# ----------------------------------------------------- fused chain pipeline
+def _slot_bucket(n: int) -> int:
+    """Pad per-leaf chain slot counts to powers of two (min 8) so the fused
+    kernel's jit cache is shared across chains of different depth/sparsity."""
+    cap = _SLOT_BUCKET_MIN
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+@dataclasses.dataclass
+class _LeafProgram:
+    """Per-leaf chain plan: an origin value plus the sparse segments applied
+    after it (segments restart at mid-chain full rewrites)."""
+
+    req: int                       # request index in the batch
+    key: str
+    origin_step: Optional[int]     # None → base tree; else wires[i].full
+    segments: List[SparseLeafDelta]
+
+
+def _resolve_leaf_programs(
+    base: FlatTree, wires: Sequence[DeltaWire]
+) -> Dict[str, Tuple[Optional[int], List[SparseLeafDelta]]]:
+    """Fold a chain's per-step leaf events into one program per final leaf.
+
+    Walks steps in order: tombstones kill a leaf, full rewrites restart its
+    chain segment (later sparse deltas apply on the rewritten value), sparse
+    deltas append to the current segment.  The result maps every leaf of the
+    chain's *final* tree to ``(origin_step, segments)``.
+    """
+    state: Dict[str, Tuple[Optional[int], List[SparseLeafDelta]]] = {
+        k: (None, []) for k in base
+    }
+    for i, w in enumerate(wires):
+        for k in w.tombstones:
+            state.pop(k, None)
+        for k, d in w.sparse.items():
+            if d.n == 0:
+                continue
+            st = state.get(k)
+            if st is None:
+                raise ValueError(
+                    f"corrupt chain: step {i} carries a sparse delta for "
+                    f"leaf {k!r} absent from the running tree"
+                )
+            st[1].append(d)
+        for k in w.full:
+            state[k] = (i, [])
+    return state
+
+
+def _num_blocks(arr: np.ndarray) -> int:
+    return -(-arr.nbytes // BLOCK_BYTES)
+
+
+def apply_delta_chains(
+    requests: Sequence[
+        Tuple[FlatTree, Sequence[Union[bytes, DeltaWire]], Optional[BlockedTree]]
+    ],
+    *,
+    stats: Optional[Dict[str, int]] = None,
+) -> List[Tuple[FlatTree, BlockedTree]]:
+    """Apply one delta chain per request, fused and batched across requests.
+
+    Each request is ``(base_tree, chain_payloads, base_blocked)`` —
+    ``base_blocked`` optionally carries the base's device-resident blocked
+    leaves so repeatedly-edited leaves skip re-``to_blocks``.  Leaves are
+    grouped by ``(num_blocks, slot_bucket)`` across *all* requests and each
+    group runs as one :func:`repro.kernels.ops.chain_apply_batched` launch.
+
+    Returns ``[(tree, blocked)]`` per request, bit-identical to folding
+    :func:`apply_delta` over each chain.  ``stats`` (optional) is bumped
+    with ``launches`` / ``fused_slots`` for observability.
+    """
+    wire_chains: List[List[DeltaWire]] = []
+    outs: List[FlatTree] = []
+    blocked_outs: List[BlockedTree] = []
+    units: List[_LeafProgram] = []
+    for ri, (base, payloads, _) in enumerate(requests):
+        wires = [
+            decode_delta_wire(p) if isinstance(p, bytes) else p
+            for p in payloads
+        ]
+        wire_chains.append(wires)
+        out: FlatTree = {}
+        outs.append(out)
+        blocked_outs.append({})
+        for key, (origin_step, segs) in _resolve_leaf_programs(
+            base, wires
+        ).items():
+            if not segs:
+                # untouched leaf (reference passthrough) or plain full decode
+                out[key] = (
+                    base[key]
+                    if origin_step is None
+                    else _arr_from_wire(wires[origin_step].full[key])
+                )
+                continue
+            units.append(_LeafProgram(ri, key, origin_step, segs))
+
+    # shape-bucketed grouping: one fused launch per (num_blocks, slot_bucket)
+    groups: Dict[Tuple[int, int], List[_LeafProgram]] = {}
+    origins: Dict[Tuple[int, str], Tuple[Any, "ops.BlockMeta"]] = {}
+    for u in units:
+        base, _, base_blocked = requests[u.req]
+        if u.origin_step is None:
+            pre = (base_blocked or {}).get(u.key)
+            if pre is not None:
+                origin_blocks, meta = pre
+            else:
+                origin_blocks, meta = ops.to_blocks(jnp.asarray(base[u.key]))
+        else:
+            arr = _arr_from_wire(wire_chains[u.req][u.origin_step].full[u.key])
+            origin_blocks, meta = ops.to_blocks(jnp.asarray(arr))
+        origins[(u.req, u.key)] = (origin_blocks, meta)
+        total = sum(s.n for s in u.segments)
+        groups.setdefault((meta.num_blocks, _slot_bucket(total)), []).append(u)
+
+    for (nb, cap), members in groups.items():
+        idx_pad = np.full((len(members), cap), -1, np.int32)
+        blk_pad = np.zeros((len(members), cap, 8, 128), np.int32)
+        for li, u in enumerate(members):
+            at = 0
+            for seg in u.segments:  # chain order: later slots win in the fold
+                idx_pad[li, at : at + seg.n] = seg.idx
+                blk_pad[li, at : at + seg.n] = seg.blocks
+                at += seg.n
+        if len(members) == 1:
+            u = members[0]
+            ob, meta = origins[(u.req, u.key)]
+            rec = ops.chain_apply(
+                ob, jnp.asarray(blk_pad[0]), jnp.asarray(idx_pad[0])
+            )
+            recs = [rec]
+        else:
+            stack = jnp.stack([origins[(u.req, u.key)][0] for u in members])
+            recs = ops.chain_apply_batched(
+                stack, jnp.asarray(blk_pad), jnp.asarray(idx_pad)
+            )
+        if stats is not None:
+            stats["launches"] = stats.get("launches", 0) + 1
+            stats["fused_slots"] = (
+                stats.get("fused_slots", 0) + len(members) * cap
+            )
+        for u, rec in zip(members, recs):
+            meta = origins[(u.req, u.key)][1]
+            outs[u.req][u.key] = np.asarray(ops.from_blocks(rec, meta))
+            blocked_outs[u.req][u.key] = (rec, meta)
+    return list(zip(outs, blocked_outs))
+
+
+def apply_delta_chain(
+    base: FlatTree,
+    payloads: Sequence[Union[bytes, DeltaWire]],
+    *,
+    base_blocked: Optional[BlockedTree] = None,
+) -> FlatTree:
+    """Fused K-step chain application (single chain): bit-identical to
+    ``functools.reduce(apply_delta, payloads, base)`` in one device dispatch
+    per leaf-shape group."""
+    return apply_delta_chains([(base, payloads, base_blocked)])[0][0]
 
 
 # ----------------------------------------------------------------- Φ model

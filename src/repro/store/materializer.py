@@ -47,7 +47,13 @@ from typing import (
     Tuple,
 )
 
-from .delta import FlatTree, apply_delta, decode_full
+from .delta import (
+    BlockedTree,
+    FlatTree,
+    apply_delta,
+    apply_delta_chains,
+    decode_full,
+)
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (store owns us)
     from .version_store import VersionStore
@@ -245,15 +251,54 @@ class MaterializationCache:
 
 
 # --------------------------------------------------------------- materializer
-class Materializer:
-    """Executes checkout plans against the object store, through the cache."""
+@dataclasses.dataclass(eq=False)
+class _Segment:
+    """A maximal run of delta steps fused into one chain application.
 
-    def __init__(self, store: "VersionStore", *, budget_bytes: int) -> None:
+    ``base`` is the tree the run starts from (cached, full-decoded, or an
+    earlier segment's terminal); ``steps`` are applied in chain order and
+    only the terminal vid's tree is materialized host-side.
+    """
+
+    base: int
+    steps: List[CheckoutStep]
+
+    @property
+    def terminal(self) -> int:
+        return self.steps[-1].vid
+
+
+class Materializer:
+    """Executes checkout plans against the object store, through the cache.
+
+    With ``fuse_chains`` (the default) delta chains run through the
+    device-resident pipeline (:func:`repro.store.delta.apply_delta_chains`):
+    intermediate trees stay in blocked device form between steps, runs of
+    steps through vids nobody else needs collapse into single fused Pallas
+    dispatches, and same-shaped leaves across a batch's chains share kernel
+    launches.  Segment *endpoints* — vids that must exist as host trees —
+    are the requested vids, vids with multiple dependents in the plan, and
+    (when the cache budget is positive) every vid, so caching semantics are
+    unchanged: a warm cache sees exactly the trees it would have seen
+    stepwise.  ``fuse_chains=False`` keeps the legacy one-hop-at-a-time
+    path; both are bit-identical.
+    """
+
+    def __init__(
+        self,
+        store: "VersionStore",
+        *,
+        budget_bytes: int,
+        fuse_chains: bool = True,
+    ) -> None:
         self._store = store
         self.planner = CheckoutPlanner(store)
         self.cache = MaterializationCache(budget_bytes)
+        self.fuse_chains = bool(fuse_chains)
         self.full_decodes = 0
         self.delta_applies = 0
+        self.fused_segments = 0
+        self.fused_stats: Dict[str, int] = {}
 
     # -- public API ----------------------------------------------------------
     def checkout(self, vid: int) -> FlatTree:
@@ -305,6 +350,8 @@ class Materializer:
             **self.cache.stats(),
             "full_decodes": self.full_decodes,
             "delta_applies": self.delta_applies,
+            "fused_segments": self.fused_segments,
+            "fused_launches": self.fused_stats.get("launches", 0),
         }
 
     # -- plan execution ------------------------------------------------------
@@ -315,12 +362,31 @@ class Materializer:
         sharing works even with a zero cache budget; everything decoded is
         also offered to the cache (budget permitting) for future requests.
         """
-        objects = self._store.objects
+        if self.fuse_chains:
+            trees = self._execute_fused(plan)
+        else:
+            trees = self._execute_stepwise(plan)
+        # hit/miss accounting per requested vid
+        planned = {s.vid for s in plan.steps}
+        for vid in plan.requested:
+            if vid in planned:
+                self.cache.misses += 1
+            else:
+                self.cache.hits += 1
+        return trees
+
+    def _load_cached(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
         trees: Dict[int, FlatTree] = {}
         for vid in plan.from_cache:
             tree = self.cache.get(vid, count=False)
             if tree is not None:
                 trees[vid] = tree
+        return trees
+
+    def _execute_stepwise(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
+        """Legacy one-hop-at-a-time execution (``fuse_chains=False``)."""
+        objects = self._store.objects
+        trees = self._load_cached(plan)
         for step in plan.steps:
             if step.base is None:
                 tree = decode_full(objects.get(step.object_key))
@@ -333,13 +399,79 @@ class Materializer:
                 self.delta_applies += 1
             trees[step.vid] = _freeze(tree)
             self.cache.put(step.vid, tree)
-        # hit/miss accounting per requested vid
-        planned = {s.vid for s in plan.steps}
-        for vid in plan.requested:
-            if vid in planned:
-                self.cache.misses += 1
+        return trees
+
+    def _execute_fused(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
+        """Segment-fused execution through the device-resident delta pipeline.
+
+        Delta steps are grouped into :class:`_Segment` runs ending at
+        endpoints (requested vids, shared bases, every vid when caching);
+        segments whose base tree is ready are batched into one
+        :func:`apply_delta_chains` call per wave, so same-shaped leaves
+        across independent chains share fused kernel launches.  Blocked
+        device forms of segment terminals are memoized locally and fed back
+        as ``base_blocked``, so a chain's intermediate trees never pay
+        ``to_blocks`` twice.
+        """
+        objects = self._store.objects
+        trees = self._load_cached(plan)
+        blocked: Dict[int, BlockedTree] = {}
+
+        requested = set(plan.requested)
+        dependents = collections.Counter(
+            s.base for s in plan.steps if s.base is not None
+        )
+        caching = self.cache.budget_bytes > 0
+
+        def endpoint(vid: int) -> bool:
+            return caching or vid in requested or dependents[vid] > 1
+
+        segments: List[_Segment] = []
+        open_at: Dict[int, _Segment] = {}
+        for step in plan.steps:
+            if step.base is None:
+                tree = decode_full(objects.get(step.object_key))
+                self.full_decodes += 1
+                trees[step.vid] = _freeze(tree)
+                self.cache.put(step.vid, tree)
+                continue
+            seg = open_at.pop(step.base, None)
+            if seg is None:
+                seg = _Segment(base=step.base, steps=[])
+            seg.steps.append(step)
+            if endpoint(step.vid):
+                segments.append(seg)
             else:
-                self.cache.hits += 1
+                open_at[step.vid] = seg
+        # a chain tail is always requested (hence an endpoint), but close any
+        # stragglers defensively so no planned step is silently dropped
+        segments.extend(open_at.values())
+
+        pending = segments
+        while pending:
+            ready = [s for s in pending if s.base in trees]
+            if not ready:
+                # base evicted between plan and execute: stepwise fallback
+                # rebuilds it (and anything under it), then the wave retries
+                self._materialize_chain(pending[0].base, trees)
+                continue
+            done = {id(s) for s in ready}
+            pending = [s for s in pending if id(s) not in done]
+            requests = [
+                (
+                    trees[s.base],
+                    [objects.get(st.object_key) for st in s.steps],
+                    blocked.get(s.base),
+                )
+                for s in ready
+            ]
+            results = apply_delta_chains(requests, stats=self.fused_stats)
+            for s, (tree, blk) in zip(ready, results):
+                trees[s.terminal] = _freeze(tree)
+                blocked[s.terminal] = blk
+                self.cache.put(s.terminal, tree)
+                self.delta_applies += len(s.steps)
+                self.fused_segments += 1
         return trees
 
     def _materialize_chain(

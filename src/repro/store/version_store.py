@@ -144,6 +144,7 @@ class VersionStore:
         cache_budget_bytes: int = 256 << 20,
         access_flush_every: int = 64,
         prefetch_hot_k: int = 8,
+        fuse_chains: bool = True,
     ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
@@ -161,8 +162,11 @@ class VersionStore:
         # current branch; owned by the Repository facade, persisted in the
         # msgpack metadata so they survive a close/reopen like version metas
         self.refs: Dict[str, Any] = {"branches": {}, "tags": {}, "head": "main"}
-        # recreation layer: planner + byte-budgeted FlatTree LRU
-        self.materializer = Materializer(self, budget_bytes=cache_budget_bytes)
+        # recreation layer: planner + byte-budgeted FlatTree LRU; fuse_chains
+        # routes delta chains through the fused device-resident pipeline
+        self.materializer = Materializer(
+            self, budget_bytes=cache_budget_bytes, fuse_chains=fuse_chains
+        )
         self.access_flush_every = access_flush_every
         self.prefetch_hot_k = prefetch_hot_k
         self._unflushed_accesses = 0

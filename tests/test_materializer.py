@@ -306,3 +306,70 @@ class TestPlanner:
         cache.get(1)  # refresh 1: now 2 is LRU
         cache.put(3, t())  # over budget: evicts 2
         assert 1 in cache and 3 in cache and 2 not in cache
+
+
+class TestFusedPipeline:
+    """The fused device-resident chain path must be invisible semantically:
+    bit-identical trees, stepwise-equivalent decode counters, same fallback
+    behavior when a planned-cached base is evicted mid-flight."""
+
+    @pytest.mark.parametrize("budget", [0, 256 << 20])
+    def test_fused_equals_stepwise(self, tmp_path, budget):
+        store, vids, _ = build_branching_store(
+            tmp_path / "a", n=10, seed=11, cache_budget_bytes=budget
+        )
+        fused = VersionStore(
+            tmp_path / "a", cache_budget_bytes=budget, fuse_chains=True
+        )
+        stepwise = VersionStore(
+            tmp_path / "a", cache_budget_bytes=budget, fuse_chains=False
+        )
+        for got, want in zip(
+            fused.checkout_many(vids), stepwise.checkout_many(vids)
+        ):
+            assert_trees_equal(got, want)
+        # fusion must not change what the accounting reports
+        f, s = fused.materializer.stats(), stepwise.materializer.stats()
+        for key in ("full_decodes", "delta_applies", "hits", "misses"):
+            assert f[key] == s[key], key
+
+    def test_whole_chain_fuses_at_zero_budget(self, tmp_path):
+        # budget 0 and a single requested tip: the whole delta chain is one
+        # segment — one fused launch wave, counters still stepwise-equivalent
+        store = VersionStore(tmp_path, cache_budget_bytes=0)
+        vids, _ = build_linear_history(store, n=6, shape=(64, 64))
+        m = store.materializer
+        d0, seg0 = m.delta_applies, m.fused_segments
+        store.checkout(vids[-1])
+        assert m.delta_applies - d0 == len(vids) - 1
+        assert m.fused_segments - seg0 == 1
+
+    @pytest.mark.parametrize("fuse", [True, False])
+    def test_evicted_base_fallback(self, tmp_path, fuse):
+        # a vid the planner saw as cached can be evicted before _execute
+        # runs (concurrent checkouts sharing one cache); both paths must
+        # rebuild it via the stepwise _materialize_chain fallback
+        store = VersionStore(tmp_path, fuse_chains=fuse)
+        vids, _ = build_linear_history(store, n=6, shape=(64, 64))
+        m = store.materializer
+        m.cache.ensure_fingerprint(store.storage_fingerprint())
+        store.checkout(vids[2])  # warms the chain prefix through vids[2]
+        plan = m.planner.plan([vids[-1]], cached=m.cache.vids())
+        assert vids[2] in plan.from_cache
+        m.cache._entries.clear()  # evict everything between plan and execute
+        m.cache.current_bytes = 0
+        trees = m._execute(plan)
+        want = VersionStore(tmp_path, cache_budget_bytes=0).checkout(vids[-1])
+        assert_trees_equal(trees[vids[-1]], want)
+
+    def test_fused_trees_frozen_and_cached(self, tmp_path):
+        store = VersionStore(tmp_path, fuse_chains=True)
+        vids, _ = build_linear_history(store, n=4, shape=(64, 64))
+        tree = store.checkout(vids[-1])
+        with pytest.raises(ValueError):
+            tree["w"][0, 0] = 1.0
+        # warm-cache semantics unchanged under fusion: intermediates cached
+        m = store.materializer
+        d0, f0 = m.delta_applies, m.full_decodes
+        store.checkout(vids[2])
+        assert (m.delta_applies, m.full_decodes) == (d0, f0)
