@@ -243,6 +243,7 @@ def prim(ea: EdgeArrays, *, pallas: bool = False) -> np.ndarray:
 # -------------------------------------------------------- (c) Modified Prim
 def _is_ancestor(p, anc, node):
     """Jitted ancestor-chain walk: True iff ``anc`` is on ``node``'s chain."""
+    node = node.astype(p.dtype)  # vertex picks are int32, id arrays int64
 
     def cond(x):
         return (x > 0) & (x != anc)

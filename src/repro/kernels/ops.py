@@ -117,7 +117,8 @@ def _compact(mask: jnp.ndarray, new_blocks: jnp.ndarray, capacity: int):
     nb = m.shape[0]
     order = jnp.cumsum(m) - 1  # destination slot per changed row
     slots = jnp.where(m == 1, order, capacity)  # unchanged -> dropped
-    pad_row = jnp.argmin(m).astype(jnp.int32)  # first unchanged row (0 if none)
+    # explicit index_dtype: int32 whether or not jax_enable_x64 is active
+    pad_row = jax.lax.argmin(m, 0, jnp.int32)  # first unchanged row (0 if none)
     idx = jnp.full((capacity,), -1, jnp.int32)
     idx = idx.at[slots].set(jnp.arange(nb, dtype=jnp.int32), mode="drop")
     idx = jnp.where(idx >= 0, idx, pad_row)
@@ -126,7 +127,7 @@ def _compact(mask: jnp.ndarray, new_blocks: jnp.ndarray, capacity: int):
     # exceeds ``capacity`` the drop-mode scatter above has discarded the
     # overflow and the packed delta is incomplete — callers must check
     # (sparse_encode raises host-side; fully-traced callers branch on it).
-    return idx, gathered, jnp.sum(m)
+    return idx, gathered, jnp.sum(m, dtype=jnp.int32)
 
 
 def sparse_encode(

@@ -20,7 +20,11 @@ the Pallas interpreter adds per-call overhead.  Both paths are bit-identical:
 the reductions are order-insensitive min/first-argmin over the same floats.
 
 NOTE: solver costs are float64; the interpreter handles that everywhere, but
-real TPU lowering would need a float32 (or split hi/lo) variant.
+real TPU lowering would need a float32 (or split hi/lo) variant.  Index math,
+by contrast, is int32 end to end: argmins use an explicit ``index_dtype`` and
+the flat-index reconstruction in :func:`min_argmin_1d` guards its int32
+capacity host-side instead of relying on ``jax_enable_x64`` widening (which
+silently does not happen in the default production mode).
 """
 
 from __future__ import annotations
@@ -30,12 +34,17 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 
 from . import PALLAS_INTERPRET
 
 DEFAULT_ROWS_PER_PROGRAM = 256
 LANE = 128  # pad the minor dim to the TPU lane width
+
+# largest flat vector min_argmin_1d can index with int32 math (padded length
+# r * LANE + col must not wrap); guarded host-side because shapes are static
+MAX_INT32_ELEMS = (1 << 31) - 1 - LANE
 
 INTERPRET = PALLAS_INTERPRET  # REPRO_PALLAS_INTERPRET env knob (kernels pkg)
 
@@ -45,7 +54,9 @@ def _min_kernel(x_ref, o_ref):
 
 
 def _argmin_kernel(x_ref, o_ref):
-    o_ref[...] = jnp.argmin(x_ref[...], axis=1)[:, None].astype(jnp.int32)
+    # explicit index_dtype: jnp.argmin would emit int64 under jax_enable_x64
+    # (and silently int32 without it) — int32 is the contract either way
+    o_ref[...] = lax.argmin(x_ref[...], 1, jnp.int32)[:, None]
 
 
 def _row_call(kernel, x: jnp.ndarray, out_dtype, *, rows_per_program: int,
@@ -87,7 +98,7 @@ def segment_argmin_rows(
 ) -> jnp.ndarray:
     """Per-row index of the first minimum (NumPy ``argmin`` tie-breaking)."""
     if not use_pallas:
-        return jnp.argmin(x, axis=1).astype(jnp.int32)
+        return lax.argmin(x, 1, jnp.int32)
     interpret = INTERPRET if interpret is None else interpret
     return _row_call(_argmin_kernel, x, jnp.int32,
                      rows_per_program=rows_per_program, interpret=interpret)
@@ -111,15 +122,25 @@ def min_argmin_1d(
     Two-stage: per-row kernel reduction, then a (tiny) reduction over row
     minima.  First-occurrence semantics survive both stages — the first row
     attaining the global min is picked, then the first column within it.
+
+    Flat indices are int32 (``r * LANE + col`` never widens): vectors longer
+    than :data:`MAX_INT32_ELEMS` are refused host-side rather than silently
+    wrapping — without ``jax_enable_x64`` an ``astype(int64)`` would have
+    been a silent int32 downcast anyway.
     """
+    if x.shape[0] > MAX_INT32_ELEMS:
+        raise ValueError(
+            f"min_argmin_1d int32 index capacity exceeded: {x.shape[0]} "
+            f"elements > {MAX_INT32_ELEMS}"
+        )
     if not use_pallas:
-        i = jnp.argmin(x)
-        return x[i], i.astype(jnp.int64)
+        i = lax.argmin(x, 0, jnp.int32)
+        return x[i], i
     x2 = pad_to_rows(x, jnp.inf)
     row_min = segment_min_rows(x2, use_pallas=True)
-    r = jnp.argmin(row_min)
+    r = lax.argmin(row_min, 0, jnp.int32)
     # argmin only the winning row — a full per-row argmin pass would double
     # the kernel work for a single consumed lane
     col = segment_argmin_rows(x2[r][None, :], use_pallas=True)[0]
-    i = r.astype(jnp.int64) * LANE + col.astype(jnp.int64)
+    i = r * LANE + col
     return row_min[r], jnp.minimum(i, x.shape[0] - 1)

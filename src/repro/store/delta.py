@@ -186,6 +186,10 @@ def apply_delta(base: FlatTree, payload: Union[bytes, DeltaWire]) -> FlatTree:
     """
     wire = decode_delta_wire(payload) if isinstance(payload, bytes) else payload
     out: FlatTree = {}
+    # device results accumulate here and come back in ONE batched transfer
+    # after the loop — a per-leaf np.asarray would serialize a device→host
+    # sync per changed leaf (the analysis host-sync lint flags exactly that)
+    pending: Dict[str, jnp.ndarray] = {}
     for key, arr in base.items():
         if key in wire.tombstones:
             continue
@@ -195,7 +199,9 @@ def apply_delta(base: FlatTree, payload: Union[bytes, DeltaWire]) -> FlatTree:
             continue
         bb, meta = ops.to_blocks(jnp.asarray(arr))
         rec = ops.sparse_apply(bb, jnp.asarray(d.blocks), jnp.asarray(d.idx))
-        out[key] = np.asarray(ops.from_blocks(rec, meta))
+        pending[key] = ops.from_blocks(rec, meta)
+    if pending:
+        out.update(jax.device_get(pending))
     for key, wire_dict in wire.full.items():
         out[key] = _arr_from_wire(wire_dict)
     return out
@@ -320,6 +326,10 @@ def apply_delta_chains(
         total = sum(s.n for s in u.segments)
         groups.setdefault((meta.num_blocks, _slot_bucket(total)), []).append(u)
 
+    # dispatch every group first, keeping results on device; the host copies
+    # happen once at the end as a single batched transfer (device_get issues
+    # the async copies together), not one blocking sync per leaf
+    host_fetch: List[Tuple[int, str, Any]] = []
     for (nb, cap), members in groups.items():
         idx_pad = np.full((len(members), cap), -1, np.int32)
         blk_pad = np.zeros((len(members), cap, 8, 128), np.int32)
@@ -348,8 +358,12 @@ def apply_delta_chains(
             )
         for u, rec in zip(members, recs):
             meta = origins[(u.req, u.key)][1]
-            outs[u.req][u.key] = np.asarray(ops.from_blocks(rec, meta))
             blocked_outs[u.req][u.key] = (rec, meta)
+            host_fetch.append((u.req, u.key, ops.from_blocks(rec, meta)))
+    if host_fetch:
+        fetched = jax.device_get([dev for _, _, dev in host_fetch])
+        for (req, key, _), arr in zip(host_fetch, fetched):
+            outs[req][key] = arr
     return list(zip(outs, blocked_outs))
 
 

@@ -251,6 +251,12 @@ class Repository:
     def gc(self) -> int:
         return self.store.gc()
 
+    def fsck(self, **kwargs: Any):
+        """Integrity-check the underlying store's storage graph, refs and
+        recorded constraints; returns an analysis
+        :class:`~repro.analysis.findings.Report`."""
+        return self.store.fsck(**kwargs)
+
     def close(self) -> None:
         self.store.close()
 

@@ -171,6 +171,11 @@ class VersionStore:
         self.prefetch_hot_k = prefetch_hot_k
         self._unflushed_accesses = 0
         self._storage_fp: Optional[str] = None
+        # record of the last repack's spec + outcome, persisted with the
+        # metadata: fsck re-validates the recorded constraints against the
+        # *current* storage graph (a post-repack mutation that silently
+        # violates an agreed bound is a finding, not a crash)
+        self.last_repack: Optional[Dict[str, Any]] = None
         self._meta_path = self.root / "meta.msgpack"
         if self._meta_path.exists():
             self._load_meta()
@@ -456,6 +461,19 @@ class VersionStore:
             "max_recreation_s": max(self.recreation_cost(v) for v in self.versions),
         }
         freed = self.gc()
+        self.last_repack = {
+            "describe": spec.describe(),
+            "problem": result.problem,
+            "solver": result.solver,
+            "backend": result.backend_used,
+            "objective": spec.objective.metric,
+            "objective_value": float(result.objective_value),
+            "constraints": [
+                {"metric": c.metric, "bound": float(c.bound)}
+                for c in spec.constraints
+            ],
+            "timestamp": time.time(),
+        }
         self._save_meta()
         if use_access_frequencies:
             # warm the cache with the hottest versions under the *new*
@@ -513,6 +531,15 @@ class VersionStore:
                 self.objects.delete(key)
         return freed
 
+    # ---------------------------------------------------------------- fsck
+    def fsck(self, **kwargs: Any):
+        """Integrity-check the storage graph; returns an analysis
+        :class:`~repro.analysis.findings.Report` (see
+        :func:`repro.analysis.fsck.fsck_store` for the checks and kwargs)."""
+        from ..analysis.fsck import fsck_store  # local: analysis -> store
+
+        return fsck_store(self, **kwargs)
+
     # ------------------------------------------------------------ metadata
     def save_refs(self) -> None:
         """Persist the ``refs`` dict (branches/tags/head) with the metadata.
@@ -539,6 +566,7 @@ class VersionStore:
                     "tags": {name: vid for name, vid in self.refs["tags"].items()},
                     "head": self.refs["head"],
                 },
+                "last_repack": self.last_repack,
             },
             use_bin_type=True,
         )
@@ -570,6 +598,7 @@ class VersionStore:
             "tags": {str(k): int(v) for k, v in (refs.get("tags") or {}).items()},
             "head": str(refs.get("head", "main")),
         }
+        self.last_repack = obj.get("last_repack") or None
         self._storage_fp = None  # metadata replaced: recompute lazily
 
     # -------------------------------------------------------------- limits

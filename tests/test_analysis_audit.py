@@ -1,0 +1,236 @@
+"""Kernel auditor tests: the repo audits clean, and each rule actually fires
+on deliberately bad inputs.
+
+* full-run regression: ``run_audit()`` over the real kernel/solver registry
+  has zero non-baselined gating findings against the committed baseline
+  (the CI gate, exercised as a test);
+* per-rule unit tests on synthetic bad targets: 64-bit jaxpr values, host
+  syncs inside loops, broken bucket functions, unaliased large pallas
+  outputs;
+* baseline framework semantics: keying, NOTE exemption, severity
+  escalation re-gating, write/load round-trip.
+"""
+
+import ast
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import findings as F
+from repro.analysis import kernel_audit as KA
+
+S = jax.ShapeDtypeStruct
+
+
+@pytest.fixture(scope="module")
+def audit_report():
+    return KA.run_audit()
+
+
+class TestFullAudit:
+    def test_zero_new_findings_vs_committed_baseline(self, audit_report):
+        baseline = F.load_baseline("analysis_baseline.json")
+        new, _ = F.partition(audit_report.findings, baseline)
+        assert new == [], "\n".join(f.render() for f in new)
+
+    def test_every_target_traced(self, audit_report):
+        # audit.trace counts targets; a trace failure is itself a finding
+        assert audit_report.checked["audit.trace"] == len(KA.audit_targets())
+        assert audit_report.by_rule("audit.trace") == []
+
+    def test_allowlisted_solver_math_is_note_only(self, audit_report):
+        d64 = audit_report.by_rule("audit.dtype64")
+        assert d64, "solver targets should surface allowlisted 64-bit notes"
+        for f in d64:
+            assert f.severity == F.Severity.NOTE
+            assert f.subject.startswith("core.solvers.jax_backend")
+
+
+def _target(fn, *avals, name="test.target"):
+    return KA.AuditTarget(name, lambda: (fn, avals))
+
+
+class TestDtype64Rule:
+    def test_explicit_astype_int64_flags(self):
+        t = _target(lambda x: x.astype(jnp.int64), S((8,), jnp.int32))
+        r = F.Report(tool="audit")
+        KA.check_dtype64(r, t, KA.trace_target(t))
+        (f,) = r.by_rule("audit.dtype64")
+        assert f.severity == F.Severity.ERROR and "int64" in f.message
+
+    def test_weak_scalars_and_i32_math_clean(self):
+        t = _target(lambda x: (x + 1) * 2, S((8,), jnp.int32))
+        r = F.Report(tool="audit")
+        KA.check_dtype64(r, t, KA.trace_target(t))
+        assert r.findings == []
+
+    def test_default_argmin_under_x64_flags(self):
+        # the exact hazard class segment_ops was fixed for
+        t = _target(lambda x: jnp.argmin(x), S((32,), jnp.float32))
+        r = F.Report(tool="audit")
+        KA.check_dtype64(r, t, KA.trace_target(t))
+        assert any("int64" in f.message for f in r.findings)
+
+
+class TestHostSyncRule:
+    def test_sync_in_loop_detected(self):
+        src = (
+            "def f(items):\n"
+            "    out = []\n"
+            "    for x in items:\n"
+            "        out.append(np.asarray(x))\n"
+            "        y = x.item()\n"
+            "    return out\n"
+        )
+        fn = ast.parse(src).body[0]
+        names = {n for _, n in KA._sync_calls_in_loops(fn)}
+        assert names == {"np.asarray", ".item"}
+
+    def test_sync_after_loop_clean(self):
+        src = (
+            "def f(items):\n"
+            "    pending = []\n"
+            "    for x in items:\n"
+            "        pending.append(g(x))\n"
+            "    return jax.device_get(pending)\n"
+        )
+        fn = ast.parse(src).body[0]
+        assert KA._sync_calls_in_loops(fn) == []
+
+    def test_hot_path_registry_matches_source(self):
+        # config rot guard: every registered hot-path function must exist
+        r = F.Report(tool="audit")
+        for module, fns in KA.HOT_PATH_FUNCTIONS.items():
+            KA.check_host_sync(r, module, fns)
+        stale = [f for f in r.findings if "stale" in f.message]
+        assert stale == [], "\n".join(f.render() for f in stale)
+        # and the actual hot path is currently sync-free in loops
+        assert r.findings == [], "\n".join(f.render() for f in r.findings)
+
+
+class TestBucketRule:
+    def test_identity_bucket_rejected(self):
+        c = KA.BucketContract("test.identity", lambda k: k, "pow2",
+                              max_check=64)
+        r = F.Report(tool="audit")
+        KA.check_bucket_contract(r, c)
+        (f,) = r.by_rule("audit.shape-bucket")
+        assert f.severity == F.Severity.ERROR
+
+    def test_undersized_bucket_rejected(self):
+        c = KA.BucketContract("test.halve", lambda k: max(8, k // 2), "pow2",
+                              max_check=64)
+        r = F.Report(tool="audit")
+        KA.check_bucket_contract(r, c)
+        assert any("dropped data" in f.message for f in r.findings)
+
+    def test_real_buckets_pass(self):
+        r = F.Report(tool="audit")
+        for c in KA.bucket_contracts():
+            KA.check_bucket_contract(r, c)
+        assert r.findings == [], "\n".join(f.render() for f in r.findings)
+
+    def test_probe_catches_unbucketed_shapes(self):
+        # a probe whose "bucket" is the raw size must split signatures
+        from repro.kernels import segment_ops
+
+        def raw_trace(n):
+            return KA._signature(jax.make_jaxpr(
+                lambda x: segment_ops.segment_min_rows(x)
+            )(S((n, 128), jnp.float32)))
+
+        p = KA.BucketProbe("test.raw", raw_trace, (8, 16))
+        r = F.Report(tool="audit")
+        KA.check_bucket_probe(r, p)
+        assert len(r.by_rule("audit.shape-bucket")) == 1
+
+
+class TestIoAliasRule:
+    def test_unaliased_large_output_flags(self):
+        from jax.experimental import pallas as pl
+
+        def copy(x):
+            return pl.pallas_call(
+                lambda x_ref, o_ref: o_ref.__setitem__(..., x_ref[...]),
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                interpret=True,
+            )(x)
+
+        t = _target(copy, S((1024, 8, 128), jnp.int32))
+        r = F.Report(tool="audit")
+        KA.check_io_alias(r, t, KA.trace_target(t))
+        (f,) = r.by_rule("audit.io-alias")
+        assert f.severity == F.Severity.WARNING
+
+    def test_small_output_exempt(self):
+        from jax.experimental import pallas as pl
+
+        def copy(x):
+            return pl.pallas_call(
+                lambda x_ref, o_ref: o_ref.__setitem__(..., x_ref[...]),
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                interpret=True,
+            )(x)
+
+        t = _target(copy, S((4, 8, 128), jnp.int32))
+        r = F.Report(tool="audit")
+        KA.check_io_alias(r, t, KA.trace_target(t))
+        assert r.findings == []
+
+
+class TestBaselineFramework:
+    def f(self, sev=F.Severity.ERROR, rule="r.x", subject="s"):
+        return F.Finding(rule, sev, subject, "msg")
+
+    def test_partition_new_vs_baselined(self, tmp_path):
+        path = tmp_path / "b.json"
+        f1, f2 = self.f(subject="a"), self.f(subject="b")
+        F.write_baseline([f1], path)
+        new, old = F.partition([f1, f2], F.load_baseline(path))
+        assert [x.subject for x in new] == ["b"]
+        assert [x.subject for x in old] == ["a"]
+
+    def test_notes_never_gate_nor_baseline(self, tmp_path):
+        path = tmp_path / "b.json"
+        note = self.f(sev=F.Severity.NOTE)
+        assert F.write_baseline([note], path) == 0
+        new, old = F.partition([note], F.load_baseline(path))
+        assert new == [] and old == []
+
+    def test_severity_escalation_regates(self, tmp_path):
+        path = tmp_path / "b.json"
+        F.write_baseline([self.f(sev=F.Severity.WARNING)], path)
+        escalated = self.f(sev=F.Severity.ERROR)
+        new, old = F.partition([escalated], F.load_baseline(path))
+        assert new == [escalated] and old == []
+
+    def test_key_is_line_free_and_stable(self):
+        a = F.Finding("r", F.Severity.ERROR, "subj", "message one")
+        b = F.Finding("r", F.Severity.WARNING, "subj", "different text")
+        assert a.key() == b.key() == "r::subj"
+
+    def test_missing_baseline_is_empty(self, tmp_path):
+        assert F.load_baseline(tmp_path / "absent.json") == {}
+
+    def test_version_mismatch_rejected(self, tmp_path):
+        p = tmp_path / "b.json"
+        p.write_text('{"version": 99, "findings": {}}')
+        with pytest.raises(ValueError, match="version"):
+            F.load_baseline(p)
+
+
+class TestAllowlist:
+    def test_prefix_downgrades_to_note(self):
+        r = F.Report(tool="audit")
+        KA._emit(r, "audit.dtype64", F.Severity.ERROR,
+                 "core.solvers.jax_backend._sssp_jit", "m")
+        (f,) = r.findings
+        assert f.severity == F.Severity.NOTE and "allowlisted" in f.message
+
+    def test_non_matching_subject_keeps_severity(self):
+        r = F.Report(tool="audit")
+        KA._emit(r, "audit.dtype64", F.Severity.ERROR,
+                 "kernels.segment_ops.min_argmin_1d", "m")
+        (f,) = r.findings
+        assert f.severity == F.Severity.ERROR
