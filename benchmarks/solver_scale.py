@@ -1,6 +1,7 @@
 """Solver wall-clock scaling on array-native synthetic instances.
 
-Sweeps instance size n over 1k → 100k versions (the paper's §6 LF/DC scale),
+Sweeps instance size n over 1k → 1M versions (past the paper's §6 LF/DC
+scale, into mergeable-heap Edmonds territory),
 generating each instance with :func:`repro.core.generate_flat` — edges land
 directly in the flat ``EdgeArrays`` representation, no per-edge dict traffic
 — and times every heuristic end to end through the declarative spec API
@@ -20,32 +21,50 @@ call per (solver, shape-bucket) so compile time is excluded.  MCA is
 host-only (directed instances use Edmonds) and appears only under
 ``solvers``.
 
-Results append to ``BENCH_solver_scale.json`` in the repo root: one entry
-per run carrying the whole (n → seconds) trajectory per solver, so repeated
-runs across PRs accumulate a history.  Also exposed as the ``solver_scale``
-suite of ``benchmarks.run`` (CSV rows, capped at 20k versions to keep the
-orchestrator fast).
+``BENCH_solver_scale.json`` in the repo root holds ``{"bounds", "history"}``:
+``history`` accumulates one entry per run carrying the whole (n → seconds)
+trajectory per solver (plus the process peak-RSS high-water mark after each
+row), and ``bounds`` records a per-(solver, n) wall-clock reference in
+seconds.  Every run doubles as a **timing-regression gate**: any timing above
+``GATE_MULT`` (3×) its recorded bound fails the run — both standalone and as
+the ``benchmarks.run`` suite (CSV rows, capped at 20k versions to keep the
+orchestrator fast).  The 3× margin rides out scheduler noise on shared CI
+boxes while still catching complexity-class regressions (the quadratic
+regimes this sweep exists to guard against are 10–100× at the top sizes).
+Refresh the references after an intentional perf change with
+``--update-bounds``.
+
+The default sweep ends at 500k and 1M versions (5.8M / 11.6M edges) — the
+mergeable-heap Edmonds scale targets.  Pass ``--backends numpy`` for those
+sizes: the jitted MP is a sequential O(n²) scan and the padded device layout
+hits its cell cap near 1M versions.
 
 Run standalone:
     PYTHONPATH=src python -m benchmarks.solver_scale [--ns 1000,5000,50000]
-        [--backends numpy,jax]
+        [--backends numpy,jax] [--update-bounds]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import resource
+import sys
 import time
 from pathlib import Path
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core import OptimizeSpec, WorkloadSpec, generate_flat, optimize
 
 from .common import Row
 
-DEFAULT_NS = (1_000, 5_000, 20_000, 50_000)
+DEFAULT_NS = (1_000, 5_000, 20_000, 50_000, 500_000, 1_000_000)
 DEFAULT_BACKENDS = ("numpy", "jax")
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_solver_scale.json"
+
+#: a timing may drift up to this factor above its recorded bound before the
+#: gate fails the run
+GATE_MULT = 3.0
 
 
 def _spec(n: int, seed: int = 0) -> WorkloadSpec:
@@ -146,27 +165,74 @@ def sweep(
                 entry["solvers"]["spt"] / max(jx["spt"], 1e-9), 3
             )
 
+        # ru_maxrss is the process lifetime high-water mark (KiB on Linux),
+        # monotone across rows — the per-row value says "solving up to this n
+        # fit in this much memory", which is the capacity-planning question
+        entry["peak_rss_mib"] = round(
+            resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0, 1
+        )
         results.append(entry)
     return results
 
 
-def record(results: List[Dict], path: Path = BENCH_PATH) -> None:
-    history = []
-    if path.exists():
-        history = json.loads(path.read_text())
-    history.append(
+def _timing_items(results: List[Dict]) -> Iterator[Tuple[str, float]]:
+    """Flatten a sweep into ``("mca/n1000", seconds)`` bound-key pairs."""
+    for entry in results:
+        for col, suffix in (("solvers", ""), ("solvers_jax", "_jax")):
+            for solver, seconds in entry.get(col, {}).items():
+                yield f"{solver}{suffix}/n{entry['n']}", float(seconds)
+
+
+def _load_bench(path: Path = BENCH_PATH) -> Dict:
+    if not path.exists():
+        return {"bounds": {}, "history": []}
+    data = json.loads(path.read_text())
+    if isinstance(data, list):
+        # legacy layout: a bare run-history list from before the bounds gate
+        return {"bounds": {}, "history": data}
+    return data
+
+
+def check_bounds(
+    results: List[Dict], bounds: Dict[str, float], mult: float = GATE_MULT
+) -> List[Tuple[str, float, float]]:
+    """Timing-regression violations: ``(key, seconds, bound)`` for every
+    swept timing above ``mult ×`` its recorded bound (unbounded keys pass)."""
+    return [
+        (key, seconds, bounds[key])
+        for key, seconds in _timing_items(results)
+        if key in bounds and seconds > mult * bounds[key]
+    ]
+
+
+def record(
+    results: List[Dict], path: Path = BENCH_PATH, update_bounds: bool = False
+) -> Dict[str, float]:
+    """Append ``results`` to the history; returns the bounds table (refreshed
+    from this run's timings when ``update_bounds``)."""
+    data = _load_bench(path)
+    data["history"].append(
         {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"), "results": results}
     )
-    path.write_text(json.dumps(history, indent=2) + "\n")
+    if update_bounds:
+        for key, seconds in _timing_items(results):
+            data["bounds"][key] = seconds
+        data["bounds"] = dict(sorted(data["bounds"].items()))
+    path.write_text(json.dumps(data, indent=2) + "\n")
+    return data["bounds"]
 
 
 def solver_scale(ns: Optional[Iterable[int]] = None) -> Iterable[Row]:
-    """``benchmarks.run`` suite adapter: CSV rows, 20k cap for CI speed."""
+    """``benchmarks.run`` suite adapter: CSV rows, 20k cap for CI speed.
+
+    Doubles as the timing-regression gate: raises after emitting its rows if
+    any timing exceeds ``GATE_MULT ×`` its recorded bound.
+    """
     ns = tuple(ns) if ns is not None else tuple(
         n for n in DEFAULT_NS if n <= 20_000
     )
     results = sweep(ns)
-    record(results)
+    bounds = record(results)
     for entry in results:
         for col, suffix in (("solvers", ""), ("solvers_jax", "_jax")):
             for solver, seconds in entry.get(col, {}).items():
@@ -175,6 +241,14 @@ def solver_scale(ns: Optional[Iterable[int]] = None) -> Iterable[Row]:
                     us_per_call=seconds * 1e6,
                     derived=f"edges={entry['edges']}",
                 )
+    violations = check_bounds(results, bounds)
+    if violations:
+        raise RuntimeError(
+            "timing regression: " + "; ".join(
+                f"{k} took {s:.3f}s > {GATE_MULT:g}x bound {b:.3f}s"
+                for k, s, b in violations
+            )
+        )
 
 
 def main() -> None:
@@ -189,6 +263,11 @@ def main() -> None:
         "'jax' adds the jitted columns)",
     )
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--update-bounds", action="store_true",
+        help="refresh the per-(solver, n) timing bounds from this run "
+        "instead of gating against them",
+    )
     args = ap.parse_args()
     try:
         ns = [int(x) for x in args.ns.split(",") if x.strip()]
@@ -201,8 +280,18 @@ def main() -> None:
     if bad:
         ap.error(f"unknown backends: {sorted(bad)}")
     results = sweep(ns, seed=args.seed, backends=backends)
-    record(results)
+    bounds = record(results, update_bounds=args.update_bounds)
     print(json.dumps(results, indent=2))
+    if not args.update_bounds:
+        violations = check_bounds(results, bounds)
+        for key, seconds, bound in violations:
+            print(
+                f"TIMING REGRESSION: {key} took {seconds:.3f}s "
+                f"> {GATE_MULT:g}x bound {bound:.3f}s",
+                file=sys.stderr,
+            )
+        if violations:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -48,18 +48,7 @@ _BAD64 = ("int64", "float64", "uint64", "complex128")
 
 #: {rule: {subject prefix: reason}} — matches are downgraded to NOTE
 ALLOWLIST: Dict[str, Dict[str, str]] = {
-    "audit.dtype64": {
-        "core.solvers.jax_backend": (
-            "solver cost matrices are float64 by the bit-identity contract "
-            "(runs under enable_x64); f32 TPU variant is the ROADMAP "
-            "real-accelerator item"
-        ),
-    },
     "audit.dtype64-source": {
-        "repro.core.solvers.jax_backend": (
-            "documented f64/i64 padded layouts for the enable_x64 solver "
-            "path; remove with the real-accelerator f32 flip"
-        ),
         "repro.kernels.block_diff": (
             "hash_coefficients builds its table with host-side NumPy int64 "
             "RNG draws and bit-casts to int32 before any device upload; no "
@@ -147,10 +136,10 @@ def _solver_targets() -> List[AuditTarget]:
     from ..core.solvers import jax_backend as jb
 
     nvp, d = 16, 8
-    ids = S((nvp, d), jnp.int64)
-    w = S((nvp, d), jnp.float64)
-    vec_i = S((nvp,), jnp.int64)
-    vec_f = S((nvp,), jnp.float64)
+    ids = S((nvp, d), jnp.int32)
+    w = S((nvp, d), jnp.float32)
+    vec_i = S((nvp,), jnp.int32)
+    vec_f = S((nvp,), jnp.float32)
 
     return [
         AuditTarget(
@@ -161,14 +150,14 @@ def _solver_targets() -> List[AuditTarget]:
             "core.solvers.jax_backend._prim_jit",
             lambda: (lambda pd, pw, rd, rw, n: jb._prim_jit(
                 pd, pw, rd, rw, n, True),
-                (ids, w, vec_i, vec_f, S((), jnp.int64))),
+                (ids, w, vec_i, vec_f, S((), jnp.int32))),
             "jitted Prim (Problem 1, undirected)"),
         AuditTarget(
             "core.solvers.jax_backend._mp_jit",
             lambda: (lambda pd, pdl, pph, rd, rdl, rph, n, th: jb._mp_jit(
                 pd, pdl, pph, rd, rdl, rph, n, th, True),
-                (ids, w, w, vec_i, vec_f, vec_f, S((), jnp.int64),
-                 S((), jnp.float64))),
+                (ids, w, w, vec_i, vec_f, vec_f, S((), jnp.int32),
+                 S((), jnp.float32))),
             "jitted Modified Prim (Problems 4/6)"),
         AuditTarget(
             "core.solvers.jax_backend._lmg_score_jit",
@@ -176,8 +165,8 @@ def _solver_targets() -> List[AuditTarget]:
                      jb._lmg_score_jit(cu, cv, cd, cp, act, cur, dd, mm, ti,
                                        sz, wt, bu, True),
                 (vec_i, vec_i, vec_f, vec_f, S((nvp,), jnp.bool_), vec_f,
-                 vec_f, vec_f, vec_i, vec_i, S((), jnp.float64),
-                 S((), jnp.float64))),
+                 vec_f, vec_f, vec_i, vec_i, S((), jnp.float32),
+                 S((), jnp.float32))),
             "jitted LMG candidate scoring round (Problems 3/5)"),
     ]
 

@@ -346,8 +346,9 @@ def optimize(g: VersionGraph, spec: OptimizeSpec) -> OptimizeResult:
             backend_used = "numpy"
             diagnostics.setdefault(
                 "backend_fallback",
-                "directed Problem 1 uses the host Edmonds MCA "
-                "(cycle contraction has no jitted formulation)",
+                "directed Problem 1 uses the host mergeable-heap Edmonds "
+                "MCA (near-linear run-heap contraction; cycle contraction "
+                "has no jitted formulation)",
             )
 
     sol.validate()

@@ -8,9 +8,26 @@ Every array-native solver takes ``backend="numpy"`` (default) or
   does not apply (directed MCA cycle contraction).
 * ``jax`` — jitted device loops in :mod:`.jax_backend`: whole-graph
   Bellman-Ford SSSP, one-``fori_loop`` Prim and Modified-Prim, and the LMG
-  per-round candidate scoring.  Outputs are **bit-identical** to the NumPy
-  backend (same trees, same float costs); ``tests/test_jax_backend.py``
-  enforces this on the 56-instance property suite.
+  per-round candidate scoring.  Device arrays are f32/i32 (the
+  real-accelerator regime — TPUs have no 64-bit lanes); the device output
+  is a *structure selection*, and every authoritative cost is recomputed
+  host-side in f64 from the selected tree, so returned solutions match the
+  NumPy backend exactly (same trees, same float costs) —
+  ``tests/test_jax_backend.py`` enforces this on the 56-instance property
+  suite.
+
+Host complexity, per solver: Prim / SPT / MP are O(E log V) binary-heap
+loops with vectorized CSR row relaxation; directed MCA is mergeable-heap
+Edmonds (:mod:`.mst`), O(E log V) with near-linear constants on chain-like
+instances — 1M-version instances solve in minutes on one core
+(``BENCH_solver_scale.json``); LMG is O(rounds · ξ) with vectorized
+scoring; GitH is linear in the walked window.  Cheapest-edge ties break to
+the lowest edge id everywhere, which is what keeps backends and oracles in
+exact agreement.  Rule of thumb for backend choice: ``jax`` wins on SPT at
+every size (~2× at 50k) and on LMG's scoring rounds; the sequential-argmin
+MP scan and host-only directed MCA favor ``numpy`` on CPU; past ~500k
+versions the padded device layout approaches its cell cap, so scale sweeps
+run ``numpy``.
 
 ``pallas=True`` additionally routes the inner segment-min / argmin
 reductions through the Pallas kernels of :mod:`repro.kernels.segment_ops`.
@@ -31,9 +48,11 @@ class BackendUnsupported(ValueError):
     direct solver callers see it as the documented clear error."""
 
 
-# Shared numerical slacks.  The jax backend's bit-identity contract requires
-# both backends to apply *identical* tolerances in every relaxation and
-# feasibility check, so they live here rather than as per-module literals.
+# Shared numerical slacks.  Both backends apply identical tolerances in
+# every relaxation and feasibility check, so they live here rather than as
+# per-module literals.  On the f32 device path EPS sits below float32
+# resolution, so those guards degrade to strict comparisons there — exact
+# tolerance semantics are restored by the host-side f64 recompute.
 EPS = 1e-15            # relaxation acceptance slack (improvements ≤ EPS are
                        # rejected; ties within (0, EPS] are order-dependent
                        # and outside the parity contract)

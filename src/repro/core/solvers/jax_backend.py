@@ -32,8 +32,21 @@ out-row (degree ``n``) is handled separately before the main loops.  Shapes
 are bucketed (rows to powers of two, widths to multiples of 8) so jit caches
 are shared across same-bucket instances.
 
-All public entry points run under ``jax.experimental.enable_x64`` — the cost
-matrices are float64 and bit-identity requires f64 arithmetic on device.
+Dtype regime (the real-accelerator contract): every device array is 32-bit —
+cost matrices float32, index/id arrays int32 (TPUs have no 64-bit lanes; the
+``repro.analysis`` auditor gates this module at full strength).  The device
+therefore performs *selection* — which parent, which candidate, which vertex
+— while every authoritative cost is recomputed host-side in float64 from the
+selected structure: SPT/Prim/MP solutions derive their costs from the parent
+tree and the f64 edge arrays, MP's splice state is rebuilt by
+:func:`repro.core.solvers.mp` and LMG re-scores the chosen move before
+committing it.  Trees still match the NumPy oracles on the whole property
+suite (enforced by ``tests/test_jax_backend.py``); instances engineered with
+cost gaps below f32 resolution (~1e-7 relative) may legitimately pick a
+different tree of equal f64-rounded quality — that is the documented price of
+the f32 regime, and the EPS relaxation slack already put such ties outside
+the bit-identity contract.
+
 ``pallas=True`` routes reductions through the Pallas kernels of
 :mod:`repro.kernels.segment_ops` (``interpret=True`` on CPU — correct but
 slow, the interpreter executes the kernel body op by op); ``pallas=False``
@@ -50,7 +63,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.experimental import enable_x64
 
 from ...kernels.segment_ops import min_argmin_1d, segment_min_rows
 from ..edge_arrays import EdgeArrays
@@ -90,11 +102,12 @@ def _bucket_width(k: int) -> int:
 @dataclasses.dataclass(frozen=True)
 class PaddedRows:
     """Dense padded view of CSR rows: ``ids[r, c]`` is the c-th neighbour of
-    row r (sentinel ``nvp`` past the end), weights +inf-padded."""
+    row r (sentinel ``nvp`` past the end), weights +inf-padded.  Arrays are
+    device-bound and 32-bit (f32 costs, i32 ids)."""
 
     nvp: int                 # bucketed row count (real rows are 0..nv-1)
-    ids: np.ndarray          # int64 [nvp, D]
-    w: np.ndarray            # float64 [nvp, D]
+    ids: np.ndarray          # int32 [nvp, D]
+    w: np.ndarray            # float32 [nvp, D]
     w2: Optional[np.ndarray] = None  # second cost component, same layout
 
 
@@ -106,11 +119,11 @@ def padded_in_rows(ea: EdgeArrays, *, weight: str = "phi") -> PaddedRows:
     indeg = np.diff(ea.rrow_ptr[: nv + 1])
     d = _bucket_width(int(indeg.max()) if ea.m else 1)
     _check_padded_size(nvp, d, "in-edge")
-    ids = np.full((nvp, d), nvp, dtype=np.int64)
-    w = np.full((nvp, d), np.inf, dtype=np.float64)
+    ids = np.full((nvp, d), nvp, dtype=np.int32)
+    w = np.full((nvp, d), np.inf, dtype=np.float32)
     if ea.m:
-        rows = np.repeat(np.arange(nv, dtype=np.int64), indeg)
-        cols = np.arange(ea.m, dtype=np.int64) - ea.rrow_ptr[rows]
+        rows = np.repeat(np.arange(nv), indeg)
+        cols = np.arange(ea.m) - ea.rrow_ptr[rows]
         wsrc = ea.phi if weight == "phi" else ea.delta
         ids[rows, cols] = ea.src[ea.rperm]
         w[rows, cols] = wsrc[ea.rperm]
@@ -125,20 +138,20 @@ def padded_out_rows(ea: EdgeArrays) -> Tuple[PaddedRows, np.ndarray, np.ndarray,
     outdeg = np.diff(ea.row_ptr[: nv + 1])
     d = _bucket_width(int(outdeg[1:].max()) if nv > 1 and outdeg[1:].size else 1)
     _check_padded_size(nvp, d, "out-edge")
-    ids = np.full((nvp, d), nvp, dtype=np.int64)
-    delta = np.full((nvp, d), np.inf, dtype=np.float64)
-    phi = np.full((nvp, d), np.inf, dtype=np.float64)
+    ids = np.full((nvp, d), nvp, dtype=np.int32)
+    delta = np.full((nvp, d), np.inf, dtype=np.float32)
+    phi = np.full((nvp, d), np.inf, dtype=np.float32)
     s1 = int(ea.row_ptr[1])
     m1 = ea.m - s1
     if m1:
-        rows = np.repeat(np.arange(1, nv, dtype=np.int64), outdeg[1:])
-        cols = np.arange(s1, ea.m, dtype=np.int64) - ea.row_ptr[rows]
+        rows = np.repeat(np.arange(1, nv), outdeg[1:])
+        cols = np.arange(s1, ea.m) - ea.row_ptr[rows]
         ids[rows, cols] = ea.dst[s1:]
         delta[rows, cols] = ea.delta[s1:]
         phi[rows, cols] = ea.phi[s1:]
-    root_dst = np.full(nvp, nvp + 1, dtype=np.int64)  # nvp+1 => scatter-drop
-    root_delta = np.full(nvp, np.inf, dtype=np.float64)
-    root_phi = np.full(nvp, np.inf, dtype=np.float64)
+    root_dst = np.full(nvp, nvp + 1, dtype=np.int32)  # nvp+1 => scatter-drop
+    root_delta = np.full(nvp, np.inf, dtype=np.float32)
+    root_phi = np.full(nvp, np.inf, dtype=np.float32)
     root_dst[:s1] = ea.dst[:s1]
     root_delta[:s1] = ea.delta[:s1]
     root_phi[:s1] = ea.phi[:s1]
@@ -152,7 +165,7 @@ def padded_out_rows(ea: EdgeArrays) -> Tuple[PaddedRows, np.ndarray, np.ndarray,
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def _sssp_jit(ps, pw, use_pallas):
     nvp = ps.shape[0]
-    dist0 = jnp.full((nvp + 1,), jnp.inf, jnp.float64).at[0].set(0.0)
+    dist0 = jnp.full((nvp + 1,), jnp.inf, jnp.float32).at[0].set(0.0)
 
     def cond(c):
         return c[1]
@@ -187,14 +200,17 @@ def sssp(
     ea: EdgeArrays, *, weight: str = "phi", pallas: bool = False
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Single-source shortest paths from the root — the jax counterpart of
-    :func:`repro.core.solvers.spt.dijkstra_arrays` (bit-identical output)."""
-    with enable_x64():
-        rows = padded_in_rows(ea, weight=weight)
-        dist, parent = _sssp_jit(
-            jnp.asarray(rows.ids), jnp.asarray(rows.w), pallas
-        )
-        nv = ea.n + 1
-        return np.asarray(dist)[:nv], np.asarray(parent)[:nv]
+    :func:`repro.core.solvers.spt.dijkstra_arrays`.  The parent tree matches
+    the heap Dijkstra (same EPS tie semantics, f32 selection); the returned
+    ``dist`` is the f32 fixpoint — callers wanting exact costs derive them
+    from the tree (as :class:`~repro.core.version_graph.StorageSolution`
+    does)."""
+    rows = padded_in_rows(ea, weight=weight)
+    dist, parent = _sssp_jit(
+        jnp.asarray(rows.ids), jnp.asarray(rows.w), pallas
+    )
+    nv = ea.n + 1
+    return np.asarray(dist)[:nv], np.asarray(parent)[:nv]
 
 
 # ------------------------------------------------------------------- (b) Prim
@@ -202,8 +218,8 @@ def sssp(
 def _prim_jit(pd, pw, root_dst, root_w, n, use_pallas):
     nvp = pd.shape[0]
     inf = jnp.inf
-    best = jnp.full((nvp + 1,), inf, jnp.float64)
-    bp = jnp.full((nvp + 1,), -1, jnp.int64)
+    best = jnp.full((nvp + 1,), inf, jnp.float32)
+    bp = jnp.full((nvp + 1,), -1, jnp.int32)
     in_tree = jnp.zeros((nvp + 1,), jnp.bool_).at[0].set(True)
     # the root's whole out-row relaxes first (its pop is always step 0)
     best = best.at[root_dst].set(root_w, mode="drop")
@@ -230,20 +246,19 @@ def _prim_jit(pd, pw, root_dst, root_w, n, use_pallas):
 def prim(ea: EdgeArrays, *, pallas: bool = False) -> np.ndarray:
     """Prim over the undirected instance; returns the parent array (index 0
     and unreachable vertices hold ``-1``)."""
-    with enable_x64():
-        rows, root_dst, root_delta, _ = padded_out_rows(ea)
-        bp = _prim_jit(
-            jnp.asarray(rows.ids), jnp.asarray(rows.w),
-            jnp.asarray(root_dst), jnp.asarray(root_delta),
-            jnp.int64(ea.n), pallas,
-        )
-        return np.asarray(bp)[: ea.n + 1]
+    rows, root_dst, root_delta, _ = padded_out_rows(ea)
+    bp = _prim_jit(
+        jnp.asarray(rows.ids), jnp.asarray(rows.w),
+        jnp.asarray(root_dst), jnp.asarray(root_delta),
+        jnp.int32(ea.n), pallas,
+    )
+    return np.asarray(bp)[: ea.n + 1]
 
 
 # -------------------------------------------------------- (c) Modified Prim
 def _is_ancestor(p, anc, node):
     """Jitted ancestor-chain walk: True iff ``anc`` is on ``node``'s chain."""
-    node = node.astype(p.dtype)  # vertex picks are int32, id arrays int64
+    node = node.astype(p.dtype)  # argmin picks can be a narrower int
 
     def cond(x):
         return (x > 0) & (x != anc)
@@ -260,9 +275,9 @@ def _mp_jit(pd, pdelta, pphi, root_dst, root_delta, root_phi, n, theta,
             use_pallas):
     nvp = pd.shape[0]
     inf = jnp.inf
-    l = jnp.full((nvp + 1,), inf, jnp.float64).at[0].set(0.0)
-    d = jnp.full((nvp + 1,), inf, jnp.float64).at[0].set(0.0)
-    p = jnp.full((nvp + 1,), -1, jnp.int64)
+    l = jnp.full((nvp + 1,), inf, jnp.float32).at[0].set(0.0)
+    d = jnp.full((nvp + 1,), inf, jnp.float32).at[0].set(0.0)
+    p = jnp.full((nvp + 1,), -1, jnp.int32)
     in_tree = jnp.zeros((nvp + 1,), jnp.bool_).at[0].set(True)
     # the root pops first: frontier-relax its whole out-row under θ
     rimp = root_phi <= theta + CONSTRAINT_TOL
@@ -301,7 +316,11 @@ def _mp_jit(pd, pdelta, pphi, root_dst, root_delta, root_phi, n, theta,
             l = l.at[tgt].set(cdel, mode="drop")
             return l, d, p
 
-        l, d, p = lax.fori_loop(0, pd.shape[1], reparent, (l, d, p))
+        # int32 bounds: Python-int bounds would trace an int64 counter under
+        # an x64 audit trace even though the loop body is all 32-bit
+        l, d, p = lax.fori_loop(
+            jnp.int32(0), jnp.int32(pd.shape[1]), reparent, (l, d, p)
+        )
 
         # frontier relaxation under θ — one masked row op (padding carries
         # +inf costs, so both conditions mask it out)
@@ -321,24 +340,24 @@ def _mp_jit(pd, pdelta, pphi, root_dst, root_delta, root_phi, n, theta,
 
 def modified_prim_core(
     ea: EdgeArrays, theta: float, *, pallas: bool = False
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """The jitted MP main loop; returns ``(l, d, p, in_tree)`` host arrays.
-    Unreached versions (``~in_tree``) are handled by the caller's SPT splice
-    (shared with the NumPy backend in :mod:`.mp`)."""
-    with enable_x64():
-        rows, root_dst, root_delta, root_phi = padded_out_rows(ea)
-        l, d, p, in_tree = _mp_jit(
-            jnp.asarray(rows.ids), jnp.asarray(rows.w), jnp.asarray(rows.w2),
-            jnp.asarray(root_dst), jnp.asarray(root_delta),
-            jnp.asarray(root_phi), jnp.int64(ea.n), jnp.float64(theta),
-            pallas,
-        )
-        nv = ea.n + 1
-        # writable copies: the caller's SPT splice mutates these in place
-        return (
-            np.array(l[:nv]), np.array(d[:nv]),
-            np.array(p[:nv]), np.array(in_tree[:nv]),
-        )
+) -> Tuple[np.ndarray, np.ndarray]:
+    """The jitted MP main loop; returns ``(p, in_tree)`` host arrays.
+
+    The f32 ``l``/``d`` loop state stays on device — the caller (:mod:`.mp`)
+    rebuilds both in f64 from the returned structure, and routes any vertex
+    whose exact recreation cost overshoots θ (possible when a borderline
+    acceptance rounds the other way in f32) through the SPT splice it
+    already has for unreached versions."""
+    rows, root_dst, root_delta, root_phi = padded_out_rows(ea)
+    _, _, p, in_tree = _mp_jit(
+        jnp.asarray(rows.ids), jnp.asarray(rows.w), jnp.asarray(rows.w2),
+        jnp.asarray(root_dst), jnp.asarray(root_delta),
+        jnp.asarray(root_phi), jnp.int32(ea.n), jnp.float32(theta),
+        pallas,
+    )
+    nv = ea.n + 1
+    # writable copies: the caller's SPT splice mutates these in place
+    return np.array(p[:nv], dtype=np.intp), np.array(in_tree[:nv])
 
 
 # ------------------------------------------------------------ (d) LMG scoring
@@ -365,27 +384,30 @@ def _lmg_score_jit(cu, cv, cand_delta, cand_phi, active, cur_delta, d, mass,
 class LmgScorer:
     """Device-resident candidate set ξ; scores one LMG round per call.
 
-    The candidate arrays are uploaded once; per-round tree state (d / mass /
-    tin / size / current edge Δ) is shipped each call — the splice
-    bookkeeping that mutates it stays host-side in :mod:`.lmg`.
+    The candidate arrays are uploaded once (f32/i32); per-round tree state
+    (d / mass / tin / size / current edge Δ) is shipped each call — the
+    splice bookkeeping that mutates it stays host-side in :mod:`.lmg`.  The
+    device output is a *selection*: the caller recomputes the chosen move's
+    Δw/Δd/ρ in f64 and re-checks feasibility before committing (the returned
+    ρ/Δw/Δd here are the f32 scores, advisory only).
     """
 
     def __init__(self, cu, cv, cand_delta, cand_phi, *, pallas: bool = False):
         self._pallas = pallas
         self._nc = nc = cu.shape[0]
         self._ncp = ncp = _bucket_rows(max(1, nc))
-        with enable_x64():
-            pad = lambda a, fill, dt: jnp.asarray(
-                np.concatenate([a, np.full(ncp - nc, fill, dt)]).astype(dt)
-            )
-            self._cu = pad(cu, 0, np.int64)
-            self._cv = pad(cv, 0, np.int64)
-            self._cdelta = pad(cand_delta, 0.0, np.float64)
-            self._cphi = pad(cand_phi, 0.0, np.float64)
+        pad = lambda a, fill, dt: jnp.asarray(
+            np.concatenate([a, np.full(ncp - nc, fill, dt)]).astype(dt)
+        )
+        self._cu = pad(cu, 0, np.int32)
+        self._cv = pad(cv, 0, np.int32)
+        self._cdelta = pad(cand_delta, 0.0, np.float32)
+        self._cphi = pad(cand_phi, 0.0, np.float32)
 
     def score(self, active, cur_delta, d, mass, tin, size, w_total, budget):
         """Returns ``(i, rho_i, dw_i, dd_i, any_feasible)`` as host scalars;
-        ``i`` indexes the un-padded candidate arrays."""
+        ``i`` indexes the un-padded candidate arrays; the floats are f32
+        scores (selection only — recompute in f64 before mutating state)."""
         full_active = np.zeros(self._ncp, bool)
         full_active[: self._nc] = active
         # bucket the tree-state arrays like everything else, so the jit
@@ -397,13 +419,12 @@ class LmgScorer:
             out[: a.shape[0]] = a
             return jnp.asarray(out)
 
-        with enable_x64():
-            i, rho, dw, dd, any_ok = _lmg_score_jit(
-                self._cu, self._cv, self._cdelta, self._cphi,
-                jnp.asarray(full_active),
-                padv(cur_delta, np.float64), padv(d, np.float64),
-                padv(mass, np.float64), padv(tin, np.int64),
-                padv(size, np.int64),
-                jnp.float64(w_total), jnp.float64(budget), self._pallas,
-            )
-            return int(i), float(rho), float(dw), float(dd), bool(any_ok)
+        i, rho, dw, dd, any_ok = _lmg_score_jit(
+            self._cu, self._cv, self._cdelta, self._cphi,
+            jnp.asarray(full_active),
+            padv(cur_delta, np.float32), padv(d, np.float32),
+            padv(mass, np.float32), padv(tin, np.int32),
+            padv(size, np.int32),
+            jnp.float32(w_total), jnp.float32(budget), self._pallas,
+        )
+        return int(i), float(rho), float(dw), float(dd), bool(any_ok)

@@ -71,9 +71,11 @@ def local_move_greedy(
     ``weights`` enables the workload-aware variant: the objective becomes
     Σ_i w_i · R_i (Fig. 16 experiment).  ``base``/``spt`` may be passed to
     reuse precomputed trees (the benchmark sweeps budgets over one instance).
-    ``backend="jax"`` scores every round's candidate set ξ on device
-    (:class:`repro.core.solvers.jax_backend.LmgScorer`, bit-identical); the
-    subtree-splice bookkeeping below is shared by both backends.
+    ``backend="jax"`` scores every round's candidate set ξ on device in f32
+    (:class:`repro.core.solvers.jax_backend.LmgScorer`); the device argmax is
+    a *selection* — the chosen move's Δw/Δd are recomputed in f64 and
+    feasibility re-checked before committing, so the tree bookkeeping below
+    (shared by both backends) only ever sees exact arithmetic.
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown solver backend {backend!r}")
@@ -153,11 +155,25 @@ def local_move_greedy(
 
     while active.any():
         if scorer is not None:
-            i, rho_i, dwi, ddi, any_ok = scorer.score(
+            i, rho_i, _, _, any_ok = scorer.score(
                 active, cur_delta, d, mass, tin, size, w_total, budget
             )
             if not any_ok or rho_i <= 0.0:
                 break
+            # the f32 device scores only *select* i: recompute the move in
+            # f64 and re-check feasibility; a borderline candidate that flips
+            # under exact arithmetic is retired and the round re-scored
+            ui, vi = int(cu[i]), int(cv[i])
+            dwi = float(cand_delta[i] - cur_delta[vi])
+            ddi = float((d[ui] + cand_phi[i]) - d[vi])
+            reduction = -ddi * mass[vi]
+            if (
+                w_total + dwi > budget + CONSTRAINT_TOL
+                or reduction <= 0
+                or (tin[vi] <= tin[ui] < tin[vi] + size[vi])
+            ):
+                active[i] = False
+                continue
         else:
             dw = cand_delta - cur_delta[cv]
             ok = active & (w_total + dw <= budget + CONSTRAINT_TOL)

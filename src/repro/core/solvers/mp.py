@@ -55,16 +55,26 @@ def modified_prim(
     """Problem 6: min total storage subject to max_i R_i ≤ theta.
 
     ``backend="jax"`` runs the main loop as one jitted scan
-    (:func:`repro.core.solvers.jax_backend.modified_prim_core`,
-    bit-identical); the rare unreached-version SPT splice below is shared by
-    both backends.
+    (:func:`repro.core.solvers.jax_backend.modified_prim_core`) whose f32
+    state selects the structure; the exact f64 ``l``/``d`` are rebuilt from
+    that structure below, and any vertex whose exact recreation cost lands
+    above θ (a borderline f32 acceptance) is repaired through the same SPT
+    splice that serves unreached versions — shared by both backends.
     """
     if backend == "jax":
         from . import jax_backend
 
-        l, d, p, in_tree = jax_backend.modified_prim_core(
+        p, in_tree = jax_backend.modified_prim_core(
             g.arrays(), theta, pallas=pallas
         )
+        l, d = _tree_costs_f64(g, p, in_tree)
+        over = np.asarray(
+            [i for i in g.versions()
+             if in_tree[i] and d[i] > theta + CONSTRAINT_TOL],
+            dtype=np.int64,
+        )
+        if over.shape[0]:
+            in_tree[over] = False  # re-routed by the SPT splice below
     elif backend == "numpy":
         l, d, p, in_tree = _mp_core_numpy(g, theta)
     else:
@@ -76,6 +86,33 @@ def modified_prim(
         parent={i: int(p[i]) for i in g.versions()}, graph=g
     )
     return sol
+
+
+def _tree_costs_f64(g: VersionGraph, p, in_tree):
+    """Exact ``(l, d)`` state for the parent structure ``p``.
+
+    The jitted MP loop keeps its state in f32; everything downstream (the
+    SPT splice comparisons, the θ re-check) must run on exact f64 costs, so
+    they are rebuilt here from the selected tree and the f64 edge arrays.
+    """
+    nv = g.n + 1
+    l = np.full(nv, np.inf, dtype=np.float64)
+    d = np.full(nv, np.inf, dtype=np.float64)
+    l[0] = d[0] = 0.0
+    kids = [[] for _ in range(nv)]
+    for v in range(1, nv):
+        if in_tree[v] and p[v] >= 0:
+            kids[int(p[v])].append(v)
+    stack = [0]
+    while stack:
+        u = stack.pop()
+        du = float(d[u])
+        for v in kids[u]:
+            c = g.materialization_cost(v) if u == 0 else g.cost(u, v)
+            d[v] = du + c.phi
+            l[v] = c.delta
+            stack.append(v)
+    return l, d
 
 
 def _mp_core_numpy(g: VersionGraph, theta: float):

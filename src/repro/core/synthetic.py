@@ -218,7 +218,7 @@ def generate(spec: WorkloadSpec) -> SyntheticWorkload:
 
 
 def generate_flat(spec: WorkloadSpec) -> SyntheticWorkload:
-    """Array-native workload generator for 50k–100k-version instances.
+    """Array-native workload generator for 500k–1M-version instances.
 
     Same two-step shape as :func:`generate` — identical version-DAG builder,
     then Δ/Φ revealed within a ``reveal_hops`` ball — but the content model
@@ -231,10 +231,20 @@ def generate_flat(spec: WorkloadSpec) -> SyntheticWorkload:
     skipping the per-version block dictionaries that make :func:`generate`
     infeasible beyond a few thousand commits.
 
+    The reveal ball itself is computed as an *all-sources* vectorized hop
+    expansion over a CSR adjacency of the DAG: each hop expands the whole
+    ``(src, node)`` frontier with ``np.repeat`` gathers and dedups first
+    reaches by ``src·(n+1)+node`` key against a sorted seen-array — no
+    per-source Python BFS, no per-edge Python objects.  First-reach
+    tie-breaks and float accumulation order match the scalar reference
+    semantics exactly (``tests/test_array_refactor.py`` pins this against a
+    naive per-source BFS), so instances are byte-identical to what the old
+    Python loop produced.
+
     Edges are bulk-loaded straight into the flat
-    :class:`~repro.core.edge_arrays.EdgeArrays` representation — no per-edge
-    Python dict traffic — so ``benchmarks/solver_scale.py`` can sweep
-    100k-version graphs.  ``blocks`` is ``None`` in the returned workload.
+    :class:`~repro.core.edge_arrays.EdgeArrays` representation, so
+    ``benchmarks/solver_scale.py`` can sweep 1M-version graphs.  ``blocks``
+    is ``None`` in the returned workload.
     """
     rng = random.Random(spec.seed)
     parents = _build_dag(spec, rng)
@@ -275,44 +285,12 @@ def generate_flat(spec: WorkloadSpec) -> SyntheticWorkload:
         np.zeros(n, dtype=np.int64), vs, sizes_arr[1:], phi_of(sizes_arr[1:])
     )
 
-    # BFS within reveal_hops over the *undirected* version DAG, carrying the
-    # (fwd, bwd) accumulated volumes per reached vertex
-    adj: Dict[int, List[Tuple[int, float, float]]] = {v: [] for v in parents}
-    for v, ps in parents.items():
-        for p in ps:
-            # step p→v descends to v ; step v→p ascends out of v
-            adj[p].append((v, float(added[v]), float(deleted[v])))
-            adj[v].append((p, float(deleted[v]), float(added[v])))
-
-    e_src: List[int] = []
-    e_dst: List[int] = []
-    e_fwd: List[float] = []
-    e_bwd: List[float] = []
-    for src in range(1, n + 1):
-        seen = {src}
-        frontier: List[Tuple[int, float, float]] = [(src, 0.0, 0.0)]
-        for _ in range(spec.reveal_hops):
-            nxt: List[Tuple[int, float, float]] = []
-            for x, fwd, bwd in frontier:
-                for y, step_fwd, step_bwd in adj[x]:
-                    if y in seen:
-                        continue
-                    seen.add(y)
-                    nxt.append((y, fwd + step_fwd, bwd + step_bwd))
-            if not nxt:
-                break
-            for y, fwd, bwd in nxt:
-                if spec.directed or src < y:  # undirected pairs revealed once
-                    e_src.append(src)
-                    e_dst.append(y)
-                    e_fwd.append(fwd)
-                    e_bwd.append(bwd)
-            frontier = nxt
-
-    src_a = np.asarray(e_src, dtype=np.int64)
-    dst_a = np.asarray(e_dst, dtype=np.int64)
-    fwd_a = np.asarray(e_fwd, dtype=np.float64)
-    bwd_a = np.asarray(e_bwd, dtype=np.float64)
+    # reveal within reveal_hops over the *undirected* version DAG, carrying
+    # the (fwd, bwd) accumulated volumes per reached (src, node) pair; all
+    # sources expand together, one vectorized hop at a time
+    src_a, dst_a, fwd_a, bwd_a = _reveal_ball_arrays(
+        parents, added, deleted, n, spec.reveal_hops, spec.directed
+    )
     if spec.directed:
         d_fwd = fwd_a + spec.edit_overhead
         d_bwd = bwd_a + spec.edit_overhead
@@ -325,6 +303,107 @@ def generate_flat(spec: WorkloadSpec) -> SyntheticWorkload:
     dag = {v: list(ps) for v, ps in parents.items()}
     sizes = {v: float(sizes_arr[v]) for v in range(1, n + 1)}
     return SyntheticWorkload(graph=g, version_dag=dag, sizes=sizes, blocks=None)
+
+
+def _reveal_ball_arrays(
+    parents: Dict[int, List[int]],
+    added: np.ndarray,
+    deleted: np.ndarray,
+    n: int,
+    reveal_hops: int,
+    directed: bool,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """All-sources vectorized reveal-ball expansion; see :func:`generate_flat`.
+
+    Returns ``(src, dst, fwd, bwd)`` arrays of every first-reach within
+    ``reveal_hops`` (undirected specs keep only ``src < dst``), in the exact
+    order the per-source Python BFS used to append them (source-major, hops
+    ascending within a source) — downstream Φ draws consume the arrays in
+    that order, so instance bytes are unchanged.
+
+    Semantics pinned to the reference BFS: within a hop, a node reached by
+    several frontier entries keeps the *first* in (frontier-position,
+    adjacency-order); its accumulated volumes are ``parent's + step's``, one
+    float add per hop, so values are bit-equal to the sequential loop.
+    """
+    # flatten the undirected adjacency, preserving the reference insertion
+    # order (the v-ascending parents iteration) for tie-break parity
+    a_node: List[int] = []
+    a_nbr: List[int] = []
+    a_fwd: List[float] = []
+    a_bwd: List[float] = []
+    for v, ps in parents.items():
+        av = float(added[v])
+        dv = float(deleted[v])
+        for p in ps:
+            # step p→v descends to v ; step v→p ascends out of v
+            a_node.append(p)
+            a_nbr.append(v)
+            a_fwd.append(av)
+            a_bwd.append(dv)
+            a_node.append(v)
+            a_nbr.append(p)
+            a_fwd.append(dv)
+            a_bwd.append(av)
+    node_arr = np.asarray(a_node, dtype=np.int64)
+    adj_order = np.argsort(node_arr, kind="stable")
+    adj_nbr = np.asarray(a_nbr, dtype=np.int64)[adj_order]
+    adj_fwd = np.asarray(a_fwd, dtype=np.float64)[adj_order]
+    adj_bwd = np.asarray(a_bwd, dtype=np.float64)[adj_order]
+    adj_ptr = np.searchsorted(
+        node_arr[adj_order], np.arange(n + 2, dtype=np.int64)
+    )
+
+    stride = np.int64(n + 1)  # (src, node) -> scalar dedup key
+    fsrc = np.arange(1, n + 1, dtype=np.int64)
+    fnode = fsrc.copy()
+    ffwd = np.zeros(n, dtype=np.float64)
+    fbwd = np.zeros(n, dtype=np.float64)
+    seen = np.sort(fsrc * stride + fnode)
+
+    chunks: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
+    for _ in range(reveal_hops):
+        deg = adj_ptr[fnode + 1] - adj_ptr[fnode]
+        total = int(deg.sum())
+        if total == 0:
+            break
+        rep = np.repeat(np.arange(fnode.shape[0], dtype=np.int64), deg)
+        base = np.concatenate(
+            ([0], np.cumsum(deg[:-1]))
+        ) if deg.shape[0] else np.zeros(0, dtype=np.int64)
+        eidx = adj_ptr[fnode][rep] + (np.arange(total, dtype=np.int64) - base[rep])
+        cand_src = fsrc[rep]
+        cand_node = adj_nbr[eidx]
+        key = cand_src * stride + cand_node
+        # first reaches only: not seen in earlier hops, first in-batch winner
+        pos = np.minimum(np.searchsorted(seen, key), seen.shape[0] - 1)
+        fresh = np.nonzero(seen[pos] != key)[0]
+        uniq_keys, first = np.unique(key[fresh], return_index=True)
+        sel = fresh[np.sort(first)]
+        if sel.shape[0] == 0:
+            break
+        fsrc = cand_src[sel]
+        fnode = cand_node[sel]
+        ffwd = ffwd[rep[sel]] + adj_fwd[eidx[sel]]
+        fbwd = fbwd[rep[sel]] + adj_bwd[eidx[sel]]
+        seen = np.sort(np.concatenate([seen, uniq_keys]))
+        if directed:
+            chunks.append((fsrc, fnode, ffwd, fbwd))
+        else:
+            m = fsrc < fnode  # undirected pairs revealed once
+            chunks.append((fsrc[m], fnode[m], ffwd[m], fbwd[m]))
+
+    if not chunks:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z.copy(), np.zeros(0), np.zeros(0)
+    src_a = np.concatenate([c[0] for c in chunks])
+    dst_a = np.concatenate([c[1] for c in chunks])
+    fwd_a = np.concatenate([c[2] for c in chunks])
+    bwd_a = np.concatenate([c[3] for c in chunks])
+    # hop-major -> source-major, preserving per-source hop order (the exact
+    # append order of the reference BFS, which the Φ RNG stream depends on)
+    out = np.argsort(src_a, kind="stable")
+    return src_a[out], dst_a[out], fwd_a[out], bwd_a[out]
 
 
 def zipf_weights(n: int, exponent: float = 2.0, seed: int = 0) -> Dict[int, float]:

@@ -39,12 +39,12 @@ class TestFullAudit:
         assert audit_report.checked["audit.trace"] == len(KA.audit_targets())
         assert audit_report.by_rule("audit.trace") == []
 
-    def test_allowlisted_solver_math_is_note_only(self, audit_report):
-        d64 = audit_report.by_rule("audit.dtype64")
-        assert d64, "solver targets should surface allowlisted 64-bit notes"
-        for f in d64:
-            assert f.severity == F.Severity.NOTE
-            assert f.subject.startswith("core.solvers.jax_backend")
+    def test_solver_targets_fully_32bit(self, audit_report):
+        # the f32 flip deleted the jax_backend allowlist entries: solver
+        # jaxprs must now be 64-bit-free outright, not downgraded to NOTE
+        assert audit_report.by_rule("audit.dtype64") == []
+        for f in audit_report.by_rule("audit.dtype64-source"):
+            assert not f.subject.endswith("jax_backend"), f.render()
 
 
 def _target(fn, *avals, name="test.target"):
@@ -223,8 +223,8 @@ class TestBaselineFramework:
 class TestAllowlist:
     def test_prefix_downgrades_to_note(self):
         r = F.Report(tool="audit")
-        KA._emit(r, "audit.dtype64", F.Severity.ERROR,
-                 "core.solvers.jax_backend._sssp_jit", "m")
+        KA._emit(r, "audit.dtype64-source", F.Severity.ERROR,
+                 "repro.kernels.block_diff", "m")
         (f,) = r.findings
         assert f.severity == F.Severity.NOTE and "allowlisted" in f.message
 

@@ -258,3 +258,63 @@ class TestGenerateFlat:
         )
         assert wl.graph.n == 5000
         assert wl.graph.n_edges > 5000  # materializations + revealed deltas
+
+
+# ------------------------------------------------- reveal-ball equivalence
+def _naive_reveal_ball(parents, added, deleted, n, hops, directed):
+    """The scalar per-source BFS `_reveal_ball_arrays` replaced, kept as the
+    semantic oracle: source-major, hops ascending, first reach wins in
+    (frontier-position, adjacency-order), volumes accumulated one float add
+    per hop — the vectorized expansion must be bit-equal to this."""
+    adj = {x: [] for x in range(n + 1)}
+    for v, ps in parents.items():
+        av, dv = float(added[v]), float(deleted[v])
+        for p in ps:
+            adj[p].append((v, av, dv))   # descend into v
+            adj[v].append((p, dv, av))   # ascend out of v
+    out = []
+    for s in range(1, n + 1):
+        seen = {s}
+        frontier = [(s, 0.0, 0.0)]
+        for _ in range(hops):
+            nxt = []
+            for node, fw, bw in frontier:
+                for nbr, stepf, stepb in adj[node]:
+                    if nbr in seen:
+                        continue
+                    seen.add(nbr)
+                    nxt.append((nbr, fw + stepf, bw + stepb))
+            if not nxt:
+                break
+            frontier = nxt
+            for node, fw, bw in frontier:
+                if directed or s < node:
+                    out.append((s, node, fw, bw))
+    return out
+
+
+class TestRevealBallArrays:
+    @pytest.mark.parametrize("directed", [True, False])
+    def test_matches_naive_per_source_bfs(self, directed):
+        from repro.core.synthetic import _build_dag, _reveal_ball_arrays
+
+        for seed, commits, hops in [(0, 40, 3), (3, 77, 4), (7, 120, 2)]:
+            spec = WorkloadSpec(
+                commits=commits, seed=seed, reveal_hops=hops,
+                directed=directed, branch_prob=0.6, branch_interval=3,
+            )
+            parents = _build_dag(spec, random.Random(spec.seed))
+            n = len(parents)
+            nrng = np.random.default_rng(seed + 100)
+            added = np.zeros(n + 1)
+            deleted = np.zeros(n + 1)
+            added[1:] = nrng.uniform(10.0, 1000.0, n)
+            deleted[1:] = nrng.uniform(5.0, 500.0, n)
+            src, dst, fwd, bwd = _reveal_ball_arrays(
+                parents, added, deleted, n, hops, directed
+            )
+            got = list(zip(src.tolist(), dst.tolist(), fwd.tolist(),
+                           bwd.tolist()))
+            ref = _naive_reveal_ball(parents, added, deleted, n, hops,
+                                     directed)
+            assert got == ref  # order AND bit-exact float accumulation

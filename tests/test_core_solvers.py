@@ -324,3 +324,233 @@ if HAVE_HYPOTHESIS:
                 return
             mp = modified_prim(g, theta)
             assert ex.solution.storage_cost() <= mp.storage_cost() + 1e-6
+
+
+# ------------------------------------------------------- mergeable run-heap
+class _SortedListOracle:
+    """Naive `(weight, id)` multiset mirroring every RunHeap operation with
+    the same float-op order (one add per offset), so comparisons are exact
+    even for non-integer weights."""
+
+    def __init__(self, items=()):
+        self.items = list(items)
+
+    def push(self, w, i):
+        self.items.append((w, i))
+
+    def add_offset(self, c):
+        self.items = [(w + c, i) for w, i in self.items]
+
+    def meld(self, other):
+        self.items.extend(other.items)
+        other.items = []
+        return self
+
+    def pop(self):
+        m = min(self.items)
+        self.items.remove(m)
+        return m
+
+    def min_tied_ids(self):
+        w = min(self.items)[0]
+        return w, sorted(i for ww, i in self.items if ww == w)
+
+    def purge(self, is_dead):
+        self.items = [(w, i) for w, i in self.items if not is_dead(i)]
+
+    def snapshot(self):
+        return sorted(self.items)
+
+
+class TestRunHeap:
+    """Property tests for `repro.core.solvers.meldable_heap.RunHeap` against
+    the naive sorted-list oracle, including the eager-offset bit-exactness
+    and stable-dead purging contracts the Edmonds solver relies on."""
+
+    def _dead_fn(self, dead_set):
+        import numpy as np
+
+        def dead(ids):
+            return np.array([int(i) in dead_set for i in ids], dtype=bool)
+
+        return dead
+
+    def test_random_ops_vs_oracle(self):
+        import numpy as np
+
+        from repro.core.solvers.meldable_heap import RunHeap
+
+        for seed in range(8):
+            rng = random.Random(seed)
+            n_heaps = 5
+            next_id = 0
+            dead_set = set()
+            heaps, oracles = [], []
+            for _ in range(n_heaps):
+                k = rng.randint(0, 30)
+                ws = sorted(
+                    round(rng.uniform(0, 50), 2) for _ in range(k)
+                )
+                ids = list(range(next_id, next_id + k))
+                next_id += k
+                heaps.append(RunHeap.from_sorted(
+                    np.asarray(ws, dtype=np.float64),
+                    np.asarray(ids, dtype=np.int64),
+                ))
+                oracles.append(_SortedListOracle(zip(ws, ids)))
+            for _ in range(300):
+                j = rng.randrange(len(heaps))
+                h, o = heaps[j], oracles[j]
+                op = rng.choice(
+                    ["push", "pop", "meld", "offset", "tied", "purge"]
+                )
+                if op == "push":
+                    w = round(rng.uniform(0, 50), 2)
+                    h.push(w, next_id)
+                    o.push(w, next_id)
+                    next_id += 1
+                elif op == "pop" and len(h):
+                    assert h.pop() == o.pop()
+                elif op == "meld":
+                    k = rng.randrange(len(heaps))
+                    if k != j:
+                        heaps[j] = h.meld(heaps[k])
+                        oracles[j] = o.meld(oracles[k])
+                        heaps[k] = RunHeap()
+                        oracles[k] = _SortedListOracle()
+                elif op == "offset":
+                    c = round(rng.uniform(-5, 5), 2)
+                    h.add_offset(c)
+                    o.add_offset(c)
+                elif op == "tied" and len(h):
+                    w, ids = h.min_tied_ids()
+                    ow, oids = o.min_tied_ids()
+                    assert w == ow
+                    assert sorted(ids.tolist()) == oids
+                elif op == "purge" and len(h):
+                    # stable-dead contract: ids only ever *join* dead_set
+                    alive = [i for _, i in o.items]
+                    for i in rng.sample(alive, len(alive) // 3):
+                        dead_set.add(i)
+                    dead = self._dead_fn(dead_set)
+                    if rng.random() < 0.5:
+                        h.compact(dead)
+                    else:
+                        h.drop_while(dead)
+                        h.compact(dead)  # oracle purges fully; align
+                    o.purge(lambda i: i in dead_set)
+                # re-fetch: meld may have made `h` the emptied donor
+                assert len(heaps[j]) == len(oracles[j].items)
+            for h, o in zip(heaps, oracles):
+                assert sorted(h.items()) == o.snapshot()
+
+    def test_eager_offsets_bit_exact(self):
+        """Offsets must be applied individually in order — `(w+c1)+c2`, not
+        `w+(c1+c2)` — matching the seed oracle's sequential subtractions."""
+        import numpy as np
+
+        from repro.core.solvers.meldable_heap import RunHeap
+
+        w0, c1, c2 = 0.1, 0.2, 0.3
+        h = RunHeap.from_sorted(
+            np.array([w0]), np.array([7], dtype=np.int64)
+        )
+        h.add_offset(c1)
+        h.add_offset(c2)
+        assert h.peek() == ((w0 + c1) + c2, 7)
+        assert h.peek() != (w0 + (c1 + c2), 7)  # the regrouping this guards
+
+    def test_min_tied_ids_after_collapse(self):
+        """An offset can collapse two distinct weights to bitwise equality;
+        the tied-min block must still report every id at the min."""
+        import numpy as np
+
+        from repro.core.solvers.meldable_heap import RunHeap
+
+        # 1.0 and 1.0+2^-53 differ, but both + 1e10 round to the same float
+        a, b = 1.0, 1.0 + 2.0**-53
+        h = RunHeap.from_sorted(
+            np.array([a, b]), np.array([9, 3], dtype=np.int64)
+        )
+        h.add_offset(1e10)
+        w, ids = h.min_tied_ids()
+        assert w == a + 1e10 == b + 1e10
+        assert sorted(ids.tolist()) == [3, 9]
+
+    def test_compact_drops_empty_runs_and_rebounds(self):
+        import numpy as np
+
+        from repro.core.solvers.meldable_heap import RunHeap
+
+        h = RunHeap.from_sorted(
+            np.arange(100, dtype=np.float64),
+            np.arange(100, dtype=np.int64),
+        )
+        h.compact(self._dead_fn(set(range(0, 100, 2))))
+        assert len(h) == 50
+        assert sorted(i for _, i in h.items()) == list(range(1, 100, 2))
+        h.compact(self._dead_fn(set(range(100))))
+        assert len(h) == 0 and not h
+
+
+# ------------------------------------------------ adversarial Edmonds MCA
+def _two_cycle_chain(n, eps=1e-3):
+    """Directed instance whose cheapest in-edges pair up into 2-cycles that
+    re-pair after every contraction round — a log-deep tower of nested
+    cycles, the worst case for the contraction bookkeeping."""
+    g = VersionGraph(n, directed=True)
+    for i in range(1, n + 1):
+        g.set_materialization(i, 1000.0 + i, 1000.0 + i)
+    for i in range(1, n):
+        g.set_delta(i, i + 1, 10.0 + eps * i, 20.0)
+        g.set_delta(i + 1, i, 10.0 + eps * i, 20.0)
+    return g
+
+
+def _dense_tied(n, seed, levels=(5.0, 10.0)):
+    """Dense directed instance with only two distinct delta costs: maximal
+    weight ties stress the lowest-edge-id tie-break through contractions."""
+    rng = random.Random(seed)
+    g = VersionGraph(n, directed=True)
+    for i in range(1, n + 1):
+        g.set_materialization(i, 100.0 + i, 100.0 + i)
+    for u in range(1, n + 1):
+        for v in range(1, n + 1):
+            if u != v:
+                g.set_delta(u, v, rng.choice(levels), 15.0)
+    return g
+
+
+class TestEdmondsAdversarial:
+    """The mergeable-heap Edmonds must stay exactly equal to the seed oracle
+    on instances engineered to maximize contraction depth and tie pressure
+    (the regimes the run-heap rewrite optimizes)."""
+
+    def test_two_cycle_chain_matches_oracle(self):
+        from reference_solvers import ref_minimum_storage_tree
+
+        for n in (2, 3, 17, 64, 129):
+            g = _two_cycle_chain(n)
+            new = minimum_storage_tree(g)
+            ref = ref_minimum_storage_tree(g)
+            assert new.parent == ref.parent, f"n={n}"
+            assert new.storage_cost() == ref.storage_cost()
+
+    def test_two_cycle_chain_all_ties(self):
+        from reference_solvers import ref_minimum_storage_tree
+
+        g = _two_cycle_chain(40, eps=0.0)  # every 2-cycle costs the same
+        new = minimum_storage_tree(g)
+        ref = ref_minimum_storage_tree(g)
+        assert new.parent == ref.parent
+        assert new.storage_cost() == ref.storage_cost()
+
+    def test_dense_two_level_ties_match_oracle(self):
+        from reference_solvers import ref_minimum_storage_tree
+
+        for seed, n in ((0, 24), (1, 31), (2, 40)):
+            g = _dense_tied(n, seed)
+            new = minimum_storage_tree(g)
+            ref = ref_minimum_storage_tree(g)
+            assert new.parent == ref.parent, f"seed={seed}"
+            assert new.storage_cost() == ref.storage_cost()

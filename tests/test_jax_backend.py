@@ -1,8 +1,10 @@
 """Backend-parity property tests: ``backend="jax"`` vs ``backend="numpy"``.
 
-The jitted solver backend (``repro.core.solvers.jax_backend``) must be
-*bit-identical* to the NumPy oracles: same parent trees, same float storage /
-recreation costs.  Enforced here on the 56-instance random suite of
+The jitted solver backend (``repro.core.solvers.jax_backend``) runs 32-bit
+device selection with host-side f64 cost recomputation: the parent trees must
+match the NumPy oracles exactly, and since all reported costs are derived in
+f64 from tree + edge arrays, cost equality follows.  Enforced here on the
+56-instance random suite of
 ``test_array_refactor`` (4 synthetic families × 8 seeds + 24 dense random,
 directed and undirected) plus corner cases — single version, star graph,
 disconnected-but-for-root — and, on a subset, with the Pallas segment
@@ -216,7 +218,8 @@ class TestCornerCases:
 
 # --------------------------------------------------------- segment-op kernels
 class TestSegmentOps:
-    """Unit tests run under enable_x64 — the solver backend's float64 regime."""
+    """Unit tests run under enable_x64 to check the kernels are
+    dtype-polymorphic; the production solver path feeds them f32/i32."""
 
     def _rows(self, seed, shape=(37, 19)):
         rng = np.random.RandomState(seed)
