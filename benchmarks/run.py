@@ -20,12 +20,14 @@ def main() -> None:
     from . import delta_chain as dc
     from . import paper_figures as pf
     from . import serving_checkout as sc
+    from . import serving_qps as sq
     from . import solver_scale as ss
     from . import system_benches as sb
 
     suites = [
         ("solver_scale", ss.solver_scale),
         ("serving_checkout", sc.serving_checkout),
+        ("serving_qps", sq.serving_qps),
         ("delta_chain", dc.delta_chain),
         ("fig13", pf.fig13_tradeoff_directed),
         ("fig14", pf.fig14_maxrec_directed),

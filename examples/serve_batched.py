@@ -1,37 +1,79 @@
-"""Batched serving with a contiguous KV cache (prefill + decode steps).
+"""Batched + coalesced dataset serving through the DatasetService tier.
 
-Runs the reduced qwen3-32b family (GQA + qk-norm) through the ServeEngine:
-batched prefill, greedy decode, throughput report.  The identical bundle
-functions lower at pod scale in the dry-run's prefill_32k/decode_32k cells.
+Builds a small branching version history, then fires concurrent checkout
+traffic at the async service front-end to show its two de-duplication
+mechanisms doing their job:
+
+* **coalescing** — eight simultaneous requests for the same ref share one
+  materialization (the ``checkout.coalesced`` counter accounts for 7 of 8);
+* **batching** — requests for distinct refs arriving within the batching
+  window fold into a single ``checkout_many`` plan, so storage chains
+  shared between the refs decode once.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 
-import jax
+import asyncio
+import tempfile
+
 import numpy as np
 
-from repro.configs import ARCHS
-from repro.models.registry import get_model
-from repro.serving.engine import ServeEngine
+from repro.store.repository import Repository
+
+
+def build_history(repo: Repository, versions: int = 12) -> None:
+    rng = np.random.RandomState(0)
+    tree = {"w": rng.randn(64, 48).astype(np.float32)}
+    repo.commit(tree, message="root")
+    for i in range(versions - 1):
+        tree = {"w": tree["w"].copy()}
+        tree["w"][i % 60 : i % 60 + 2] += rng.randn(2, 48).astype(np.float32)
+        repo.commit(tree, message=f"step {i}")
+    repo.tag("release", at=repo.resolve("main"))
+
+
+async def serve(repo: Repository) -> None:
+    async with repo.serve(readers=4, batch_window_s=0.005) as svc:
+        # 8 concurrent requests for one ref -> one decode, 7 coalesced
+        trees = await asyncio.gather(
+            *(svc.checkout("release") for _ in range(8))
+        )
+        assert all(np.array_equal(t["w"], trees[0]["w"]) for t in trees)
+        c = svc.metrics.counter
+        print(
+            f"[coalesce] 8 concurrent checkout('release') -> "
+            f"{c('checkout.coalesced')} coalesced, "
+            f"{c('checkout.batched_refs')} materialized"
+        )
+
+        # distinct refs inside one batching window -> one folded plan
+        before = c("checkout.batches")
+        await svc.checkout_many([2, 4, 6, 8, 10])
+        print(
+            f"[batch] 5 distinct refs -> "
+            f"{c('checkout.batches') - before} checkout_many dispatch(es)"
+        )
+
+        # the same refs again: all warm now, served from cache
+        await svc.checkout_many([2, 4, 6, 8, 10])
+        print(
+            f"[warm] repeat pass: {c('checkout.warm_hits')} warm hits, "
+            f"{c('checkout.warm_misses')} misses overall"
+        )
+
+        lat = svc.metrics.track("latency.checkout")
+        print(
+            f"[latency] {lat['count']} checkouts: "
+            f"p50 {lat['p50_ms']} ms, p99 {lat['p99_ms']} ms"
+        )
 
 
 def main() -> None:
-    cfg = ARCHS["qwen3-32b"].reduced()
-    bundle = get_model(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
-    B, prompt, new = 4, 48, 24
-    engine = ServeEngine(bundle, params, max_len=prompt + new, batch=B)
-    rng = np.random.RandomState(0)
-    batch = {"tokens": rng.randint(0, cfg.vocab, (B, prompt)).astype(np.int32)}
-    res = engine.generate(batch, max_new_tokens=new)
-    print(f"[serve] batch={B} prompt={prompt} -> {res.steps} new tokens/request")
-    print(f"[serve] prefill {res.prefill_s*1e3:.1f} ms, "
-          f"decode {res.decode_s/max(res.steps,1)*1e3:.1f} ms/step, "
-          f"{res.steps*B/max(res.decode_s,1e-9):.1f} tok/s")
-    print(f"[serve] greedy determinism check:", end=" ")
-    res2 = ServeEngine(bundle, params, max_len=prompt + new, batch=B).generate(
-        batch, max_new_tokens=new)
-    assert np.array_equal(res.tokens, res2.tokens)
+    with tempfile.TemporaryDirectory() as root:
+        repo = Repository(root)
+        build_history(repo)
+        asyncio.run(serve(repo))
+        repo.close()
     print("OK ✓")
 
 

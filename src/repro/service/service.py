@@ -1,0 +1,407 @@
+"""DatasetService — concurrent serving front-end over a :class:`Repository`.
+
+The paper's recreation cost Φ only matters under retrieval traffic; this is
+the tier that takes that traffic (the OrpheusDB/DataHub "bolt-on serving
+front-end" shape): an asyncio event loop accepting checkout / commit / log /
+diff / repack requests and dispatching the CPU/device-bound work onto thread
+pools, with three load-bearing mechanisms:
+
+* **Request coalescing** — a checkout resolves its ref to a vid at enqueue
+  time (the snapshot point); if a materialization for that vid is already in
+  flight, the request awaits the same future instead of decoding twice
+  (``checkout.coalesced`` counts these).  Correct because a version's tree
+  is immutable: whatever commit lands meanwhile, vid → tree never changes.
+
+* **Batching window** — distinct vids arriving within ``batch_window_s``
+  fold into one :meth:`VersionStore.checkout_many` plan (capped at
+  ``max_batch``), so chain prefixes shared across concurrent requests decode
+  exactly once.  The batch runs on a reader thread-pool worker; requesters
+  await per-vid futures.
+
+* **Single-writer / multi-reader coordination** — commits serialize on a
+  one-thread writer pool and may overlap with readers (a commit only
+  *appends* to the storage graph, and the append-aware cache keeps reader
+  state warm across it — see ``cache_invalidation="chain"`` on
+  ``VersionStore``).  ``repack`` and the background fsck sweep take the
+  exclusive side of an async reader-writer lock, quiescing every in-flight
+  request before the storage graph rewrites under them.
+
+Reads are snapshot-consistent: ref resolution happens once per request on
+the event loop, so a ``checkout("main")`` racing a commit observes either
+the old or the new tip, never a torn mix — and the tree it returns is the
+immutable content of whichever vid it resolved.
+
+Per-request metrics (queue wait, decode time, warm-hit attribution,
+p50/p99 end-to-end latency) record into :class:`ServiceMetrics`; a
+configurable :class:`~repro.service.sweeper.FsckSweeper` surfaces integrity
+findings and repack recommendations through the same registry.
+
+Usage::
+
+    repo = Repository(root)
+    async with DatasetService(repo, readers=8) as svc:
+        tree = await svc.checkout("main")
+        vid = await svc.commit(new_tree, message="nightly refresh")
+        print(svc.stats()["counters"])
+
+All public coroutines must run on the loop that ``start()`` ran on.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import contextlib
+import dataclasses
+import logging
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Set, Union
+
+from ..store.delta import FlatTree
+from ..store.repository import Ref, Repository, TreeDiff
+from .metrics import ServiceMetrics
+
+logger = logging.getLogger("repro.service")
+
+__all__ = ["DatasetService"]
+
+
+class _AsyncRWLock:
+    """Async reader-writer lock: checkouts/commits/log/diff share the read
+    side; repack and fsck take the write side, draining readers first.  A
+    waiting writer blocks new readers, so sustained read traffic cannot
+    starve a repack."""
+
+    def __init__(self) -> None:
+        self._readers = 0
+        self._writer = False
+        self._cond: Optional[asyncio.Condition] = None
+
+    def _condition(self) -> asyncio.Condition:
+        if self._cond is None:  # created lazily on the running loop
+            self._cond = asyncio.Condition()
+        return self._cond
+
+    @contextlib.asynccontextmanager
+    async def read(self):
+        cond = self._condition()
+        async with cond:
+            await cond.wait_for(lambda: not self._writer)
+            self._readers += 1
+        try:
+            yield
+        finally:
+            async with cond:
+                self._readers -= 1
+                cond.notify_all()
+
+    @contextlib.asynccontextmanager
+    async def write(self):
+        cond = self._condition()
+        async with cond:
+            await cond.wait_for(lambda: not self._writer)
+            self._writer = True
+            try:
+                await cond.wait_for(lambda: self._readers == 0)
+            except BaseException:
+                # cancelled mid-acquire: drop the claim or the flag leaks
+                # and every later reader/writer blocks forever
+                self._writer = False
+                cond.notify_all()
+                raise
+        try:
+            yield
+        finally:
+            async with cond:
+                self._writer = False
+                cond.notify_all()
+
+
+@dataclasses.dataclass
+class _PendingCheckout:
+    """One enqueued checkout awaiting its batch: vid, future, enqueue time."""
+
+    vid: int
+    future: "asyncio.Future[FlatTree]"
+    enqueued_at: float
+
+
+class DatasetService:
+    """Asyncio serving tier over a :class:`Repository` (see module docs).
+
+    Construct, then ``await start()`` (or use ``async with``).  Knobs:
+
+    * ``readers`` — checkout/log/diff thread-pool width (checkouts are
+      CPU/device-bound; the event loop itself never decodes).
+    * ``batch_window_s`` — how long a checkout waits for co-batchable
+      requests before dispatching; ``0`` dispatches on the next loop tick.
+    * ``max_batch`` — dispatch immediately once this many distinct vids are
+      pending, whatever the window says.
+    * ``fsck_interval_s`` — run a background integrity sweep this often
+      (``None`` disables; see :class:`FsckSweeper`).  ``fsck_sample``
+      bounds the expensive per-version re-decode.
+    """
+
+    def __init__(
+        self,
+        repo: Repository,
+        *,
+        readers: int = 4,
+        batch_window_s: float = 0.002,
+        max_batch: int = 32,
+        fsck_interval_s: Optional[float] = None,
+        fsck_sample: Optional[int] = None,
+        metrics_cap: int = 100_000,
+    ) -> None:
+        if readers < 1:
+            raise ValueError(f"need at least one reader thread, got {readers}")
+        self.repo = repo
+        self.readers = int(readers)
+        self.batch_window_s = float(batch_window_s)
+        self.max_batch = int(max_batch)
+        self.fsck_interval_s = fsck_interval_s
+        self.fsck_sample = fsck_sample
+        self.metrics = ServiceMetrics(track_cap=metrics_cap)
+        self.last_fsck = None  # most recent sweep Report (sweeper writes it)
+        self._rw = _AsyncRWLock()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._reader_pool: Optional[ThreadPoolExecutor] = None
+        self._writer_pool: Optional[ThreadPoolExecutor] = None
+        self._inflight: Dict[int, "asyncio.Future[FlatTree]"] = {}
+        self._pending: List[_PendingCheckout] = []
+        self._window_handle: Optional[asyncio.TimerHandle] = None
+        self._dispatch_tasks: Set["asyncio.Task"] = set()
+        self._sweep_task: Optional["asyncio.Task"] = None
+        self._started = False
+
+    # ------------------------------------------------------------ lifecycle
+    async def start(self) -> "DatasetService":
+        """Bind to the running loop, spin up pools and the fsck sweeper."""
+        if self._started:
+            raise RuntimeError("service already started")
+        self._loop = asyncio.get_running_loop()
+        self._reader_pool = ThreadPoolExecutor(
+            max_workers=self.readers, thread_name_prefix="repro-svc-read"
+        )
+        self._writer_pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-svc-write"
+        )
+        self._started = True
+        if self.fsck_interval_s is not None:
+            from .sweeper import FsckSweeper  # local: sweeper imports us
+
+            sweeper = FsckSweeper(
+                self, interval_s=self.fsck_interval_s, sample=self.fsck_sample
+            )
+            self._sweep_task = self._loop.create_task(sweeper.run())
+        return self
+
+    async def stop(self) -> None:
+        """Drain in-flight work, stop the sweeper, flush access counts."""
+        if not self._started:
+            return
+        self._started = False  # new requests now refuse
+        if self._sweep_task is not None:
+            self._sweep_task.cancel()
+            with contextlib.suppress(asyncio.CancelledError):
+                await self._sweep_task
+            self._sweep_task = None
+        self._dispatch_now()  # whatever the window was still holding
+        while self._dispatch_tasks:
+            await asyncio.gather(
+                *list(self._dispatch_tasks), return_exceptions=True
+            )
+        # quiesce: taking the write side proves no reader remains in flight
+        async with self._rw.write():
+            pass
+        self._reader_pool.shutdown(wait=True)
+        self._writer_pool.shutdown(wait=True)
+        self.repo.store.flush_access_counts()
+
+    async def __aenter__(self) -> "DatasetService":
+        return await self.start()
+
+    async def __aexit__(self, *exc: Any) -> None:
+        await self.stop()
+
+    def _require_started(self) -> None:
+        if not self._started:
+            raise RuntimeError(
+                "DatasetService not started (await start() or use "
+                "'async with DatasetService(...)')"
+            )
+
+    # ------------------------------------------------------------- checkout
+    async def checkout(self, ref: Optional[Ref] = None) -> FlatTree:
+        """Materialize the tree at ``ref`` (default: head tip).
+
+        Coalesces with any in-flight materialization of the same vid and
+        folds into the current batching window otherwise.  Returns a fresh
+        dict per request; the arrays are shared with the cache, read-only.
+        """
+        self._require_started()
+        t0 = self._loop.time()
+        self.metrics.inc("requests.checkout")
+        try:
+            async with self._rw.read():
+                vid = self.repo.resolve(ref)  # snapshot point
+                fut = self._inflight.get(vid)
+                if fut is not None:
+                    self.metrics.inc("checkout.coalesced")
+                else:
+                    fut = self._loop.create_future()
+                    self._inflight[vid] = fut
+                    self._pending.append(_PendingCheckout(vid, fut, t0))
+                    self._arm_window()
+                tree = await fut
+        except Exception:
+            self.metrics.inc("errors.checkout")
+            raise
+        self.metrics.observe("latency.checkout", self._loop.time() - t0)
+        return dict(tree)
+
+    async def checkout_many(self, refs: Sequence[Ref]) -> List[FlatTree]:
+        """Concurrent checkouts of several refs — they coalesce and batch
+        against each other exactly like independent requests."""
+        return list(
+            await asyncio.gather(*(self.checkout(r) for r in refs))
+        )
+
+    def _arm_window(self) -> None:
+        if len(self._pending) >= self.max_batch:
+            self._dispatch_now()
+        elif self._window_handle is None:
+            self._window_handle = self._loop.call_later(
+                self.batch_window_s, self._dispatch_now
+            )
+
+    def _dispatch_now(self) -> None:
+        if self._window_handle is not None:
+            self._window_handle.cancel()
+            self._window_handle = None
+        batch, self._pending = self._pending, []
+        if not batch:
+            return
+        task = self._loop.create_task(self._dispatch(batch))
+        self._dispatch_tasks.add(task)
+        task.add_done_callback(self._dispatch_tasks.discard)
+
+    async def _dispatch(self, batch: List[_PendingCheckout]) -> None:
+        """Run one folded batch on a reader thread; settle per-vid futures."""
+        now = self._loop.time()
+        store = self.repo.store
+        self.metrics.inc("checkout.batches")
+        self.metrics.inc("checkout.batched_refs", len(batch))
+        for p in batch:
+            self.metrics.observe("queue_wait", now - p.enqueued_at)
+            # warm-hit attribution before the decode mutates cache state
+            if store.materializer.probe(p.vid):
+                self.metrics.inc("checkout.warm_hits")
+            else:
+                self.metrics.inc("checkout.warm_misses")
+        vids = [p.vid for p in batch]  # distinct by construction (coalescing)
+        try:
+            t0 = self._loop.time()
+            trees = await self._loop.run_in_executor(
+                self._reader_pool, store.checkout_many, vids
+            )
+            self.metrics.observe("decode", self._loop.time() - t0)
+        except Exception as exc:
+            for p in batch:
+                self._inflight.pop(p.vid, None)
+                if not p.future.done():
+                    p.future.set_exception(exc)
+            return
+        for p, tree in zip(batch, trees):
+            self._inflight.pop(p.vid, None)
+            if not p.future.done():
+                p.future.set_result(tree)
+
+    # ---------------------------------------------------------------- write
+    async def commit(
+        self,
+        tree: Any,
+        *,
+        message: str = "",
+        parent: Union[Ref, Sequence[Ref], None] = None,
+        branch: Optional[str] = None,
+    ) -> int:
+        """Commit a payload through the single-writer pool; returns its vid.
+
+        Commits hold the read side of the RW lock — they may overlap with
+        checkouts (append-only, and the append-aware cache keeps reader
+        entries warm) but serialize among themselves on the one writer
+        thread, and are excluded by an in-progress repack/fsck.
+        """
+        self._require_started()
+        t0 = self._loop.time()
+        self.metrics.inc("requests.commit")
+        try:
+            async with self._rw.read():
+                vid = await self._loop.run_in_executor(
+                    self._writer_pool,
+                    lambda: self.repo.commit(
+                        tree, message=message, parent=parent, branch=branch
+                    ),
+                )
+        except Exception:
+            self.metrics.inc("errors.commit")
+            raise
+        self.metrics.observe("latency.commit", self._loop.time() - t0)
+        return vid
+
+    async def repack(
+        self, spec: Any = "lmg", **kwargs: Any
+    ) -> Dict[str, Any]:
+        """Re-optimize physical storage under the exclusive write lock —
+        every in-flight checkout/commit drains first, and the cache purge
+        the rewrite triggers can never race a reader."""
+        self._require_started()
+        t0 = self._loop.time()
+        self.metrics.inc("requests.repack")
+        async with self._rw.write():
+            out = await self._loop.run_in_executor(
+                self._writer_pool, lambda: self.repo.repack(spec, **kwargs)
+            )
+        self.metrics.observe("latency.repack", self._loop.time() - t0)
+        return out
+
+    # ---------------------------------------------------------------- reads
+    async def log(self, ref: Optional[Ref] = None) -> List[Any]:
+        """Ancestry of ``ref`` (resolved at dispatch), newest first."""
+        self._require_started()
+        self.metrics.inc("requests.log")
+        async with self._rw.read():
+            return await self._loop.run_in_executor(
+                self._reader_pool, self.repo.log, ref
+            )
+
+    async def diff(self, a: Ref, b: Ref) -> TreeDiff:
+        """Leaf-level diff of two refs, materialized on a reader thread."""
+        self._require_started()
+        self.metrics.inc("requests.diff")
+        async with self._rw.read():
+            return await self._loop.run_in_executor(
+                self._reader_pool, self.repo.diff, a, b
+            )
+
+    async def fsck(self):
+        """One on-demand integrity sweep (same path, metrics and write-lock
+        quiescing as the periodic background sweeper)."""
+        self._require_started()
+        from .sweeper import FsckSweeper
+
+        return await FsckSweeper(
+            self, interval_s=0.0, sample=self.fsck_sample
+        ).sweep()
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Any]:
+        """Service metrics snapshot + the shared materializer/cache stats."""
+        out = self.metrics.snapshot()
+        out["store"] = self.repo.store.materializer.stats()
+        if self.last_fsck is not None:
+            out["fsck"] = {
+                "findings": len(self.last_fsck.findings),
+                "checked": sum(self.last_fsck.checked.values()),
+            }
+        return out

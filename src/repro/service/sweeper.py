@@ -1,0 +1,81 @@
+"""Background integrity sweeps for a running :class:`DatasetService`.
+
+A long-lived serving process accumulates risk the offline tools never see:
+bit-rot in delta payloads, a half-applied repack after a crash, constraint
+drift (a storage graph that no longer satisfies the recreation bound δ the
+last optimization promised).  :class:`FsckSweeper` runs
+:meth:`Repository.fsck` on a configurable cadence under the service's
+exclusive write lock — the same quiescing a repack takes — so the whole
+version table can be walked without racing in-flight commits.
+
+Findings land in the shared :class:`ServiceMetrics` registry
+(``fsck.sweeps``, ``fsck.findings``) and the full
+:class:`~repro.analysis.findings.Report` is kept on
+``service.last_fsck``.  A ``fsck.constraint`` finding means the stored
+chains violate the recreation-cost bound the last repack was solved
+against — the sweep counts it under ``fsck.repack_recommended`` and logs a
+repack recommendation, since re-solving storage is the fix, not a serving
+concern.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import logging
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle (service starts us)
+    from .service import DatasetService
+
+logger = logging.getLogger("repro.service")
+
+__all__ = ["FsckSweeper"]
+
+
+class FsckSweeper:
+    """Periodic fsck runner bound to one service (see module docs)."""
+
+    def __init__(
+        self,
+        service: "DatasetService",
+        *,
+        interval_s: float,
+        sample: Optional[int] = None,
+    ) -> None:
+        self.service = service
+        self.interval_s = float(interval_s)
+        self.sample = sample
+
+    async def run(self) -> None:
+        """Sweep every ``interval_s`` seconds until cancelled."""
+        while True:
+            await asyncio.sleep(self.interval_s)
+            try:
+                await self.sweep()
+            except asyncio.CancelledError:
+                raise
+            except Exception:
+                self.service.metrics.inc("errors.fsck")
+                logger.exception("background fsck sweep failed")
+
+    async def sweep(self):
+        """One sweep: quiesce requests, fsck on a reader thread, record."""
+        svc = self.service
+        async with svc._rw.write():
+            report = await svc._loop.run_in_executor(
+                svc._reader_pool,
+                lambda: svc.repo.fsck(sample=self.sample),
+            )
+        svc.last_fsck = report
+        svc.metrics.inc("fsck.sweeps")
+        svc.metrics.inc("fsck.findings", len(report.findings))
+        drift = report.by_rule("fsck.constraint")
+        if drift:
+            svc.metrics.inc("fsck.repack_recommended")
+            logger.warning(
+                "fsck: %d constraint-drift finding(s) — stored chains no "
+                "longer meet the last optimization's recreation bound; "
+                "recommend scheduling a repack",
+                len(drift),
+            )
+        return report

@@ -14,12 +14,21 @@ parts:
   raises instead of looping.
 
 * :class:`MaterializationCache` — a byte-budgeted LRU of materialized
-  FlatTrees keyed by ``(vid, storage-graph fingerprint)``.  The fingerprint
-  hashes every ``(vid, stored_base, object_key)`` triple, so any commit or
-  repack changes it and stale entries can never be served; the cache drops
-  everything the moment it sees a new fingerprint.  Cached arrays are marked
-  read-only — a caller mutating a checkout result in place would otherwise
-  silently corrupt every future checkout of that version.
+  FlatTrees keyed by vid, each entry tagged with the fingerprint it was
+  decoded under.  Under the default **append-aware** discipline
+  (``cache_invalidation="chain"``) the tag is the vid's own *decode-chain*
+  fingerprint — a hash over just the ``(vid, stored_base, object_key)``
+  triples along its storage chain — so a commit (which appends triples but
+  rewrites none) leaves every warm entry valid and interleaved save+serve
+  traffic stays warm; only an operation that rewrites chains (repack, which
+  purges wholesale) invalidates.  ``cache_invalidation="global"`` keeps the
+  legacy discipline: one whole-graph fingerprint, any commit or repack
+  rotates it and the cache drops everything.  Either way a stale tree can
+  never be served — an entry is only returned when its tag matches the live
+  fingerprint.  Cached arrays are marked read-only — a caller mutating a
+  checkout result in place would otherwise silently corrupt every future
+  checkout of that version.  Cache lookups, inserts and evictions take an
+  internal lock so the service tier's reader threads can share one cache.
 
 * :class:`Materializer` — executes plans against the :class:`ObjectStore`,
   feeding every decoded tree (intermediates included — they are exactly the
@@ -36,9 +45,11 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import threading
 from typing import (
     TYPE_CHECKING,
     Any,
+    Callable,
     Dict,
     Iterable,
     List,
@@ -174,80 +185,152 @@ class CheckoutPlanner:
 
 # --------------------------------------------------------------------- cache
 class MaterializationCache:
-    """Byte-budgeted LRU of FlatTrees keyed by (vid, storage fingerprint).
+    """Byte-budgeted LRU of FlatTrees keyed by vid, fingerprint-validated.
 
-    One fingerprint is live at a time: the first operation under a new
-    fingerprint drops every entry from the old storage graph, so a repack or
-    commit can never leak a stale tree into a checkout.  Entries are evicted
-    least-recently-used once resident bytes exceed ``budget_bytes``; a tree
-    larger than the whole budget is simply not cached.
+    Every entry is tagged with the fingerprint it was decoded under; a
+    lookup returns it only when the caller's fingerprint matches, so a stale
+    tree can never be served.  The tag discipline belongs to the
+    :class:`Materializer`:
+
+    * *chain* (append-aware) — tags are per-vid decode-chain fingerprints;
+      a mismatched entry is dropped individually (``invalidations`` counts
+      them) while the rest of the cache stays warm.  Commits never rotate
+      chain fingerprints of existing versions, so interleaved commit+serve
+      traffic keeps its hits; ``purge`` (repack) still drops everything.
+    * *global* (legacy) — tags are implicit: :meth:`ensure_fingerprint`
+      adopts one whole-graph fingerprint at a time and the first operation
+      under a new one drops every entry.
+
+    Entries are evicted least-recently-used once resident bytes exceed
+    ``budget_bytes``; a tree larger than the whole budget is simply not
+    cached.  All access goes through one internal lock — the service tier's
+    reader threads share this cache concurrently.
     """
 
     def __init__(self, budget_bytes: int) -> None:
         self.budget_bytes = int(budget_bytes)
+        self._lock = threading.RLock()
         self._fp: Optional[str] = None
-        self._entries: "collections.OrderedDict[int, Tuple[FlatTree, int]]" = (
-            collections.OrderedDict()
-        )
+        self._entries: (
+            "collections.OrderedDict[int, Tuple[FlatTree, int, Optional[str]]]"
+        ) = collections.OrderedDict()
         self.current_bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.purges = 0
 
     # -- fingerprint handling ------------------------------------------------
+    @property
+    def epoch(self) -> Optional[str]:
+        """The live whole-graph fingerprint (global discipline only)."""
+        return self._fp
+
     def ensure_fingerprint(self, fp: str) -> None:
         """Adopt ``fp`` as the live storage graph, clearing stale entries."""
-        if fp != self._fp:
+        with self._lock:
+            if fp != self._fp:
+                if self._entries:
+                    self.invalidations += 1
+                self._entries.clear()
+                self.current_bytes = 0
+                self._fp = fp
+
+    def purge(self) -> None:
+        """Drop every entry (repack rewrites chains wholesale; a full purge
+        beats lazily discovering n stale tags one lookup at a time)."""
+        with self._lock:
             if self._entries:
-                self.invalidations += 1
+                self.purges += 1
             self._entries.clear()
             self.current_bytes = 0
-            self._fp = fp
+            self._fp = None
+
+    def valid_vids(self, fp_of: Callable[[int], Optional[str]]) -> List[int]:
+        """Vids whose entry tag matches ``fp_of(vid)``, dropping the rest.
+
+        An *explicit* validation sweep over every entry — the serving path
+        validates lazily at ``get`` instead; this is for introspection (the
+        service's warm-set accounting) and tests pinning tag semantics.
+        """
+        with self._lock:
+            stale = [
+                vid
+                for vid, ent in self._entries.items()
+                if ent[2] != fp_of(vid)
+            ]
+            for vid in stale:
+                _, nbytes, _ = self._entries.pop(vid)
+                self.current_bytes -= nbytes
+                self.invalidations += 1
+            return list(self._entries.keys())
 
     # -- lookup / insert -----------------------------------------------------
-    def vids(self) -> Iterable[int]:
-        return self._entries.keys()
+    def vids(self) -> List[int]:
+        with self._lock:
+            return list(self._entries.keys())
 
     def __contains__(self, vid: int) -> bool:
-        return vid in self._entries
+        with self._lock:
+            return vid in self._entries
 
-    def get(self, vid: int, *, count: bool = True) -> Optional[FlatTree]:
-        ent = self._entries.get(vid)
-        if ent is None:
+    def probe(self, vid: int, fp: Optional[str] = None) -> bool:
+        """Non-counting validity check: is ``vid`` servable under ``fp``?"""
+        with self._lock:
+            ent = self._entries.get(vid)
+            return ent is not None and ent[2] == fp
+
+    def get(
+        self, vid: int, fp: Optional[str] = None, *, count: bool = True
+    ) -> Optional[FlatTree]:
+        with self._lock:
+            ent = self._entries.get(vid)
+            if ent is not None and ent[2] != fp:
+                # stale chain tag: this entry alone is dead, drop it
+                self._entries.pop(vid)
+                self.current_bytes -= ent[1]
+                self.invalidations += 1
+                ent = None
+            if ent is None:
+                if count:
+                    self.misses += 1
+                return None
+            self._entries.move_to_end(vid)
             if count:
-                self.misses += 1
-            return None
-        self._entries.move_to_end(vid)
-        if count:
-            self.hits += 1
-        return ent[0]
+                self.hits += 1
+            return ent[0]
 
-    def put(self, vid: int, tree: FlatTree) -> None:
+    def put(
+        self, vid: int, tree: FlatTree, fp: Optional[str] = None
+    ) -> None:
         if self.budget_bytes <= 0:
             return
         nbytes = tree_nbytes(tree)
         if nbytes > self.budget_bytes:
             return
-        if vid in self._entries:
-            self.current_bytes -= self._entries.pop(vid)[1]
-        self._entries[vid] = (tree, nbytes)
-        self.current_bytes += nbytes
-        while self.current_bytes > self.budget_bytes:
-            _, (_, old_bytes) = self._entries.popitem(last=False)
-            self.current_bytes -= old_bytes
-            self.evictions += 1
+        with self._lock:
+            if vid in self._entries:
+                self.current_bytes -= self._entries.pop(vid)[1]
+            self._entries[vid] = (tree, nbytes, fp)
+            self.current_bytes += nbytes
+            while self.current_bytes > self.budget_bytes:
+                _, (_, old_bytes, _) = self._entries.popitem(last=False)
+                self.current_bytes -= old_bytes
+                self.evictions += 1
 
     def stats(self) -> Dict[str, int]:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-            "invalidations": self.invalidations,
-            "entries": len(self._entries),
-            "current_bytes": self.current_bytes,
-            "budget_bytes": self.budget_bytes,
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations,
+                "purges": self.purges,
+                "entries": len(self._entries),
+                "current_bytes": self.current_bytes,
+                "budget_bytes": self.budget_bytes,
+            }
 
 
 # --------------------------------------------------------------- materializer
@@ -290,15 +373,51 @@ class Materializer:
         *,
         budget_bytes: int,
         fuse_chains: bool = True,
+        invalidation: str = "chain",
     ) -> None:
+        if invalidation not in ("chain", "global"):
+            raise ValueError(
+                f"invalidation must be 'chain' or 'global', got {invalidation!r}"
+            )
         self._store = store
         self.planner = CheckoutPlanner(store)
         self.cache = MaterializationCache(budget_bytes)
         self.fuse_chains = bool(fuse_chains)
+        self.invalidation = invalidation
         self.full_decodes = 0
         self.delta_applies = 0
         self.fused_segments = 0
         self.fused_stats: Dict[str, int] = {}
+
+    # -- fingerprint discipline ----------------------------------------------
+    def _entry_fp(self, vid: int) -> Optional[str]:
+        """The tag a cache entry for ``vid`` must carry to be servable."""
+        if self.invalidation == "chain":
+            return self._store.chain_fingerprint(vid)
+        return None  # global mode: validity is the epoch, entries untagged
+
+    def _cached_vids(self) -> List[int]:
+        """Vids the planner may treat as materialized (global mode rotates
+        the epoch first, purging on change).  The list is *optimistic* in
+        chain mode: entries are validated lazily at lookup — ``get`` drops a
+        stale tag, and the execute paths rebuild anything that vanished
+        between plan and execute — so a plan never pays a full-cache
+        fingerprint sweep."""
+        if self.invalidation == "global":
+            self.cache.ensure_fingerprint(self._store.storage_fingerprint())
+        return self.cache.vids()
+
+    def probe(self, vid: int) -> bool:
+        """Non-counting warm check: would ``checkout(vid)`` be a cache hit?"""
+        try:
+            if self.invalidation == "global":
+                return (
+                    self.cache.epoch == self._store.storage_fingerprint()
+                    and vid in self.cache
+                )
+            return self.cache.probe(vid, self._store.chain_fingerprint(vid))
+        except (KeyError, RuntimeError):
+            return False  # unknown vid / corrupted chain: not servable
 
     # -- public API ----------------------------------------------------------
     def checkout(self, vid: int) -> FlatTree:
@@ -313,15 +432,18 @@ class Materializer:
         to add/remove keys) but the arrays are shared with the cache and
         read-only.
         """
-        self.cache.ensure_fingerprint(self._store.storage_fingerprint())
-        plan = self.planner.plan(vids, cached=self.cache.vids())
+        plan = self.planner.plan(vids, cached=self._cached_vids())
         trees = self._execute(plan)
         out: List[FlatTree] = []
         for vid in plan.requested:
             tree = trees.get(vid)
             if tree is None:
-                tree = self.cache.get(vid, count=False)
-                assert tree is not None, f"plan missed vid {vid}"
+                tree = self.cache.get(vid, self._entry_fp(vid), count=False)
+            if tree is None:
+                # the planner saw this vid cached but its entry was evicted
+                # (concurrent checkout sharing the cache) or its chain tag
+                # went stale between plan and execute: rebuild it
+                tree = self._materialize_chain(vid, trees)
             out.append(dict(tree))
         return out
 
@@ -334,7 +456,7 @@ class Materializer:
         """
         if self.cache.budget_bytes <= 0:
             return 0
-        self.cache.ensure_fingerprint(self._store.storage_fingerprint())
+        self._cached_vids()  # global mode: rotate the epoch before warming
         warmed = 0
         # reversed: LRU evicts oldest inserts first, so load coldest→hottest
         for vid in reversed(list(vids)):
@@ -378,7 +500,7 @@ class Materializer:
     def _load_cached(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
         trees: Dict[int, FlatTree] = {}
         for vid in plan.from_cache:
-            tree = self.cache.get(vid, count=False)
+            tree = self.cache.get(vid, self._entry_fp(vid), count=False)
             if tree is not None:
                 trees[vid] = tree
         return trees
@@ -398,7 +520,7 @@ class Materializer:
                 tree = apply_delta(base_tree, objects.get(step.object_key))
                 self.delta_applies += 1
             trees[step.vid] = _freeze(tree)
-            self.cache.put(step.vid, tree)
+            self.cache.put(step.vid, tree, self._entry_fp(step.vid))
         return trees
 
     def _execute_fused(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
@@ -433,7 +555,7 @@ class Materializer:
                 tree = decode_full(objects.get(step.object_key))
                 self.full_decodes += 1
                 trees[step.vid] = _freeze(tree)
-                self.cache.put(step.vid, tree)
+                self.cache.put(step.vid, tree, self._entry_fp(step.vid))
                 continue
             seg = open_at.pop(step.base, None)
             if seg is None:
@@ -469,7 +591,7 @@ class Materializer:
             for s, (tree, blk) in zip(ready, results):
                 trees[s.terminal] = _freeze(tree)
                 blocked[s.terminal] = blk
-                self.cache.put(s.terminal, tree)
+                self.cache.put(s.terminal, tree, self._entry_fp(s.terminal))
                 self.delta_applies += len(s.steps)
                 self.fused_segments += 1
         return trees
@@ -490,5 +612,5 @@ class Materializer:
                 )
                 self.delta_applies += 1
             trees[step.vid] = _freeze(tree)
-            self.cache.put(step.vid, tree)
+            self.cache.put(step.vid, tree, self._entry_fp(step.vid))
         return trees[vid]

@@ -257,6 +257,19 @@ class Repository:
         :class:`~repro.analysis.findings.Report`."""
         return self.store.fsck(**kwargs)
 
+    def serve(self, **kwargs: Any) -> "Any":
+        """Build a :class:`~repro.service.DatasetService` over this repo.
+
+        Keyword arguments pass through to ``DatasetService`` (reader-pool
+        width, batching window, fsck cadence, ...); the caller starts it::
+
+            async with repo.serve(readers=8) as svc:
+                tree = await svc.checkout("main")
+        """
+        from ..service import DatasetService  # local: service imports us
+
+        return DatasetService(self, **kwargs)
+
     def close(self) -> None:
         self.store.close()
 

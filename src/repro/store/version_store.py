@@ -19,16 +19,31 @@ Checkout path (the recreation layer): every checkout routes through the
 :class:`~repro.store.materializer.Materializer` — a ``CheckoutPlanner`` that
 compiles one or many requested vids into a topologically ordered decode plan
 (shared storage-chain prefixes decoded exactly once), executed through a
-byte-budgeted LRU ``MaterializationCache`` of FlatTrees keyed by
-``(vid, storage-graph fingerprint)``.  The fingerprint hashes every
-``(vid, stored_base, object_key)`` triple, so commits and repacks invalidate
-the cache atomically and a stale tree can never be served.  ``checkout``
-serves hot versions from memory; ``checkout_many`` batches k checkouts into
-one plan, bit-identical to k sequential calls but strictly cheaper on
-chain-sharing batches.  The cache budget is the ``cache_budget_bytes``
-constructor knob (default 256 MiB; 0 disables caching while keeping
-within-batch prefix sharing), and ``repack(use_access_frequencies=True)``
-prefetches the hottest versions back into the cache after rewriting storage.
+byte-budgeted LRU ``MaterializationCache`` of FlatTrees validated per entry
+against a fingerprint.  Under the default append-aware discipline
+(``cache_invalidation="chain"``) each entry is tagged with its vid's
+*decode-chain* fingerprint — a hash over just the ``(vid, stored_base,
+object_key)`` triples along that vid's storage chain — so a commit (which
+appends triples but rewrites none) keeps every warm entry alive and
+interleaved save+serve traffic never goes cold; ``repack`` rewrites chains
+and purges the cache wholesale.  ``cache_invalidation="global"`` keeps the
+legacy whole-graph fingerprint that any commit rotates (purging everything);
+either way a stale tree can never be served.  ``checkout`` serves hot
+versions from memory; ``checkout_many`` batches k checkouts into one plan,
+bit-identical to k sequential calls but strictly cheaper on chain-sharing
+batches.  The cache budget is the ``cache_budget_bytes`` constructor knob
+(default 256 MiB; 0 disables caching while keeping within-batch prefix
+sharing), and ``repack(use_access_frequencies=True)`` prefetches the hottest
+versions back into the cache after rewriting storage.
+
+Concurrency: the store is single-writer / multi-reader.  Checkouts may run
+from several threads at once — the materialization cache takes its own lock,
+and access-count bumps, vid allocation and metadata writes are guarded by
+the store lock.  Mutating operations (``commit``, ``repack``,
+``gc``, ref writes) must stay confined to one writer at a time; ``commit``
+may run concurrently with readers (it only appends), while ``repack``/``gc``
+require exclusive access (the service tier enforces both with a
+reader-writer lock).
 
 Access counts are the workload signal for frequency-aware repacking; they
 are flushed to the metadata file every ``access_flush_every`` checkouts and
@@ -53,6 +68,7 @@ import dataclasses
 import hashlib
 import os
 import tempfile
+import threading
 import time
 import warnings
 from pathlib import Path
@@ -145,6 +161,7 @@ class VersionStore:
         access_flush_every: int = 64,
         prefetch_hot_k: int = 8,
         fuse_chains: bool = True,
+        cache_invalidation: str = "chain",
     ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
@@ -153,6 +170,9 @@ class VersionStore:
         self.delta_hops = delta_hops
         self.versions: Dict[int, VersionMeta] = {}
         self._next_vid = 1
+        # guards hot state shared with service-tier reader threads: access
+        # counts, vid allocation, and metadata writes
+        self._lock = threading.RLock()
         # measured Δ entries: (src, dst) -> {sfp, dfp, delta, payload_len,
         # changed_blocks}; persisted in the msgpack metadata so repack only
         # re-measures pairs whose endpoints changed
@@ -163,9 +183,14 @@ class VersionStore:
         # msgpack metadata so they survive a close/reopen like version metas
         self.refs: Dict[str, Any] = {"branches": {}, "tags": {}, "head": "main"}
         # recreation layer: planner + byte-budgeted FlatTree LRU; fuse_chains
-        # routes delta chains through the fused device-resident pipeline
+        # routes delta chains through the fused device-resident pipeline,
+        # cache_invalidation picks the append-aware ("chain") or legacy
+        # whole-graph ("global") fingerprint discipline
         self.materializer = Materializer(
-            self, budget_bytes=cache_budget_bytes, fuse_chains=fuse_chains
+            self,
+            budget_bytes=cache_budget_bytes,
+            fuse_chains=fuse_chains,
+            invalidation=cache_invalidation,
         )
         self.access_flush_every = access_flush_every
         self.prefetch_hot_k = prefetch_hot_k
@@ -196,8 +221,9 @@ class VersionStore:
         Repository facade — one rewrite per commit, never two)."""
         flat = flatten_payload(payload)
         raw = sum(a.nbytes for a in flat.values())
-        vid = self._next_vid
-        self._next_vid += 1
+        with self._lock:
+            vid = self._next_vid
+            self._next_vid += 1
 
         full_payload = encode_full(flat)
         stored_base = None
@@ -217,33 +243,63 @@ class VersionStore:
             phi = self.cost_model.phi_delta(
                 stored, len(best_obj), best_stats["changed_blocks"]
             )
-        self.versions[vid] = VersionMeta(
-            vid=vid,
-            parents=list(parents),
-            message=message,
-            created_at=time.time(),
-            raw_bytes=raw,
-            stored_base=stored_base,
-            object_key=key,
-            stored_bytes=stored,
-            phi=phi,
-            content_fp=hashlib.sha256(full_payload).hexdigest(),
-        )
-        self._storage_fp = None  # new triple => new storage-graph fingerprint
-        if update_branch is not None:
-            self.refs["branches"][update_branch] = vid
-        self._save_meta()
+        with self._lock:
+            self.versions[vid] = VersionMeta(
+                vid=vid,
+                parents=list(parents),
+                message=message,
+                created_at=time.time(),
+                raw_bytes=raw,
+                stored_base=stored_base,
+                object_key=key,
+                stored_bytes=stored,
+                phi=phi,
+                content_fp=hashlib.sha256(full_payload).hexdigest(),
+            )
+            # a commit only *appends* a (vid, stored_base, object_key) triple:
+            # the whole-graph fingerprint rotates (global-mode caches purge)
+            # but every existing decode chain is untouched, so append-aware
+            # caches stay warm
+            self._storage_fp = None
+            if update_branch is not None:
+                self.refs["branches"][update_branch] = vid
+            self._save_meta()
         return vid
 
     # ------------------------------------------------------------ checkout
     def storage_fingerprint(self) -> str:
-        """Hash of every (vid, stored_base, object_key) triple — the cache key
-        epoch.  Changes on commit and repack, never within a read-only
-        workload, so the materialization cache invalidates exactly when the
-        storage graph does."""
-        if self._storage_fp is None:
-            self._storage_fp = _storage_graph_fp(self.versions)
-        return self._storage_fp
+        """Hash of every (vid, stored_base, object_key) triple — the
+        whole-graph cache epoch used by ``cache_invalidation="global"`` and
+        fsck.  Changes on commit and repack, never within a read-only
+        workload.  (The default ``"chain"`` discipline uses
+        :meth:`chain_fingerprint` instead, which commits do *not* rotate.)"""
+        with self._lock:
+            if self._storage_fp is None:
+                self._storage_fp = _storage_graph_fp(self.versions)
+            return self._storage_fp
+
+    def chain_fingerprint(self, vid: int) -> str:
+        """Fingerprint of ``vid``'s decode chain: a rolling hash over the
+        ``(vid, stored_base, object_key)`` triples from ``vid`` down to its
+        full object.  This is the append-aware cache tag — a commit adds new
+        triples but never rewrites existing ones, so every existing chain
+        fingerprint survives commits; a chain rewrite (repack, or a direct
+        metadata edit) changes it and the tagged cache entry dies on its
+        next lookup.  Recomputed per call — deliberately not memoized, so
+        even out-of-band ``stored_base``/``object_key`` edits are caught —
+        and the walk is bounded, so a corrupted cycle raises instead of
+        looping."""
+        h = hashlib.sha256()
+        v: Optional[int] = vid
+        hops = 0
+        while v is not None:
+            meta = self.versions[v]
+            h.update(f"{v}:{meta.stored_base}:{meta.object_key};".encode())
+            v = meta.stored_base
+            hops += 1
+            if hops > len(self.versions):
+                raise RuntimeError("storage graph cycle")
+        return h.hexdigest()
 
     def checkout(self, vid: int) -> FlatTree:
         """Recreate a version through the materialization layer."""
@@ -258,11 +314,12 @@ class VersionStore:
         out = self.materializer.checkout_many(vids)
         # bump only after success: a KeyError/cycle abort must not inflate
         # the workload signal feeding frequency-aware repack
-        for vid in vids:
-            self.versions[vid].access_count += 1
-        self._unflushed_accesses += len(vids)
-        if self._unflushed_accesses >= self.access_flush_every:
-            self.flush_access_counts()
+        with self._lock:
+            for vid in vids:
+                self.versions[vid].access_count += 1
+            self._unflushed_accesses += len(vids)
+            if self._unflushed_accesses >= self.access_flush_every:
+                self.flush_access_counts()
         return out
 
     def _checkout_flat(self, vid: int) -> FlatTree:
@@ -273,8 +330,9 @@ class VersionStore:
         """Persist access counts accumulated by checkouts since the last
         metadata write (they feed ``repack(use_access_frequencies=True)``
         after a reload)."""
-        if self._unflushed_accesses:
-            self._save_meta()
+        with self._lock:
+            if self._unflushed_accesses:
+                self._save_meta()
 
     def close(self) -> None:
         """Flush pending metadata (access counts).  Safe to call twice."""
@@ -506,20 +564,25 @@ class VersionStore:
             payload, stats = cache[(parent, vid)]
             encoded[vid] = (parent, payload, stats)
         # phase 2: rewrite objects and metadata atomically w.r.t. checkouts
-        for vid, (parent, payload, stats) in encoded.items():
-            meta = self.versions[vid]
-            key, stored = self.objects.put(payload)
-            if parent == 0:
-                meta.stored_base = None
-                meta.phi = self.cost_model.phi_full(stored, meta.raw_bytes)
-            else:
-                meta.stored_base = parent
-                meta.phi = self.cost_model.phi_delta(
-                    stored, len(payload), stats["changed_blocks"]
-                )
-            meta.object_key = key
-            meta.stored_bytes = stored
-        self._storage_fp = None  # storage graph rewritten: new cache epoch
+        with self._lock:
+            for vid, (parent, payload, stats) in encoded.items():
+                meta = self.versions[vid]
+                key, stored = self.objects.put(payload)
+                if parent == 0:
+                    meta.stored_base = None
+                    meta.phi = self.cost_model.phi_full(stored, meta.raw_bytes)
+                else:
+                    meta.stored_base = parent
+                    meta.phi = self.cost_model.phi_delta(
+                        stored, len(payload), stats["changed_blocks"]
+                    )
+                meta.object_key = key
+                meta.stored_bytes = stored
+            # storage graph rewritten: new epoch, every chain fingerprint is
+            # dead — repack keeps the wholesale purge (append-aware
+            # invalidation only spares *commits* the purge)
+            self._storage_fp = None
+        self.materializer.cache.purge()
 
     def gc(self) -> int:
         """Drop objects not referenced by any version; returns bytes freed."""
@@ -550,6 +613,10 @@ class VersionStore:
         self._save_meta()
 
     def _save_meta(self) -> None:
+        with self._lock:
+            self._save_meta_locked()
+
+    def _save_meta_locked(self) -> None:
         blob = msgpack.packb(
             {
                 "next_vid": self._next_vid,

@@ -112,12 +112,33 @@ class TestMaterializationCache:
         store.checkout(vids[2])
         assert (m.delta_applies, m.full_decodes) == (d0, f0)
 
-    def test_commit_invalidates_cache(self, tmp_path):
+    def test_commit_keeps_warm_entries_chain_mode(self, tmp_path):
+        # append-aware default: a commit appends one storage triple but
+        # rewrites no existing chain, so warm entries survive and the next
+        # checkout of an old version is a pure cache hit
         store = VersionStore(tmp_path)
         vids, payload = build_linear_history(store, n=4)
         fp1 = store.storage_fingerprint()
+        chain_fp = store.chain_fingerprint(vids[-1])
         store.checkout(vids[-1])
-        assert len(list(store.materializer.cache.vids())) > 0
+        assert len(store.materializer.cache.vids()) > 0
+        rng = np.random.RandomState(9)
+        store.commit(perturb(payload, rng), parents=[vids[-1]])
+        assert store.storage_fingerprint() != fp1  # global epoch rotates...
+        assert store.chain_fingerprint(vids[-1]) == chain_fp  # ...chains don't
+        m = store.materializer
+        d0, f0 = m.delta_applies, m.full_decodes
+        store.checkout(vids[0])
+        assert (m.delta_applies, m.full_decodes) == (d0, f0)  # no decode
+        assert m.cache.invalidations == 0
+
+    def test_commit_invalidates_cache_global_mode(self, tmp_path):
+        # legacy discipline stays available as the purge-everything baseline
+        store = VersionStore(tmp_path, cache_invalidation="global")
+        vids, payload = build_linear_history(store, n=4)
+        fp1 = store.storage_fingerprint()
+        store.checkout(vids[-1])
+        assert len(store.materializer.cache.vids()) > 0
         rng = np.random.RandomState(9)
         store.commit(perturb(payload, rng), parents=[vids[-1]])
         fp2 = store.storage_fingerprint()
