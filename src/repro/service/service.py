@@ -11,6 +11,9 @@ pools, with three load-bearing mechanisms:
   flight, the request awaits the same future instead of decoding twice
   (``checkout.coalesced`` counts these).  Correct because a version's tree
   is immutable: whatever commit lands meanwhile, vid → tree never changes.
+  Waiters await the shared future through ``asyncio.shield`` — a client
+  timeout cancelling one coalesced request cannot cancel the future the
+  other waiters share.
 
 * **Batching window** — distinct vids arriving within ``batch_window_s``
   fold into one :meth:`VersionStore.checkout_many` plan (capped at
@@ -24,7 +27,10 @@ pools, with three load-bearing mechanisms:
   state warm across it — see ``cache_invalidation="chain"`` on
   ``VersionStore``).  ``repack`` and the background fsck sweep take the
   exclusive side of an async reader-writer lock, quiescing every in-flight
-  request before the storage graph rewrites under them.
+  request before the storage graph rewrites under them.  Each enqueued
+  checkout additionally parks a read claim on its batch (released when the
+  batch settles), so the quiesce covers pending/dispatching batches even
+  when the requesters behind them were cancelled.
 
 Reads are snapshot-consistent: ref resolution happens once per request on
 the event loop, so a ``checkout("main")`` racing a commit observes either
@@ -114,6 +120,23 @@ class _AsyncRWLock:
             async with cond:
                 self._writer = False
                 cond.notify_all()
+
+    def claim_read_nowait(self) -> None:
+        """Add one read claim synchronously.  Caller must already hold the
+        read side (``_readers > 0`` and therefore no active writer), so the
+        increment needs no waiting and — being await-free on the event
+        loop — cannot be torn by a cancellation.  Pair with
+        :meth:`release_read`."""
+        if self._readers <= 0:
+            raise RuntimeError("claim_read_nowait without a held read lock")
+        self._readers += 1
+
+    async def release_read(self, n: int = 1) -> None:
+        """Release ``n`` claims taken via :meth:`claim_read_nowait`."""
+        cond = self._condition()
+        async with cond:
+            self._readers -= n
+            cond.notify_all()
 
 
 @dataclasses.dataclass
@@ -250,9 +273,18 @@ class DatasetService:
                 else:
                     fut = self._loop.create_future()
                     self._inflight[vid] = fut
+                    # the pending entry itself holds a read claim (released
+                    # by _dispatch after the batch settles), so a repack
+                    # cannot slip between enqueue and dispatch even if
+                    # every requester behind the batch is cancelled
+                    self._rw.claim_read_nowait()
                     self._pending.append(_PendingCheckout(vid, fut, t0))
                     self._arm_window()
-                tree = await fut
+                # shield: the future is shared by every request coalesced
+                # onto this vid — one waiter's cancellation must neither
+                # cancel the others nor poison _inflight with a cancelled
+                # future for later arrivals
+                tree = await asyncio.shield(fut)
         except Exception:
             self.metrics.inc("errors.checkout")
             raise
@@ -286,35 +318,53 @@ class DatasetService:
         task.add_done_callback(self._dispatch_tasks.discard)
 
     async def _dispatch(self, batch: List[_PendingCheckout]) -> None:
-        """Run one folded batch on a reader thread; settle per-vid futures."""
+        """Run one folded batch on a reader thread; settle per-vid futures.
+
+        The batch holds one read claim per entry (taken at enqueue), so the
+        whole enqueue→settle span sits inside the read side of the RW lock:
+        a repack/fsck writer cannot rewrite the storage graph under a
+        pending or running batch, whatever happened to the requesters."""
         now = self._loop.time()
         store = self.repo.store
         self.metrics.inc("checkout.batches")
         self.metrics.inc("checkout.batched_refs", len(batch))
         for p in batch:
             self.metrics.observe("queue_wait", now - p.enqueued_at)
-            # warm-hit attribution before the decode mutates cache state
-            if store.materializer.probe(p.vid):
-                self.metrics.inc("checkout.warm_hits")
-            else:
-                self.metrics.inc("checkout.warm_misses")
         vids = [p.vid for p in batch]  # distinct by construction (coalescing)
+
+        def run_batch():
+            # warm-hit attribution just before the decode mutates cache
+            # state — on the reader thread, because probe() hashes the whole
+            # decode chain per vid (too much work for the event loop)
+            warm = sum(1 for v in vids if store.materializer.probe(v))
+            return warm, store.checkout_many(vids)
+
         try:
-            t0 = self._loop.time()
-            trees = await self._loop.run_in_executor(
-                self._reader_pool, store.checkout_many, vids
-            )
-            self.metrics.observe("decode", self._loop.time() - t0)
-        except Exception as exc:
-            for p in batch:
+            try:
+                t0 = self._loop.time()
+                warm, trees = await self._loop.run_in_executor(
+                    self._reader_pool, run_batch
+                )
+                self.metrics.observe("decode", self._loop.time() - t0)
+                self.metrics.inc("checkout.warm_hits", warm)
+                self.metrics.inc("checkout.warm_misses", len(vids) - warm)
+            except Exception as exc:
+                for p in batch:
+                    self._inflight.pop(p.vid, None)
+                    if not p.future.done():
+                        p.future.set_exception(exc)
+                        # consume: every waiter may have been cancelled, and
+                        # an unretrieved future exception logs noise at GC
+                        p.future.exception()
+                return
+            for p, tree in zip(batch, trees):
                 self._inflight.pop(p.vid, None)
                 if not p.future.done():
-                    p.future.set_exception(exc)
-            return
-        for p, tree in zip(batch, trees):
-            self._inflight.pop(p.vid, None)
-            if not p.future.done():
-                p.future.set_result(tree)
+                    p.future.set_result(tree)
+        finally:
+            # shielded: the claims MUST drop even if this task is cancelled
+            # mid-release, or a waiting writer hangs forever
+            await asyncio.shield(self._rw.release_read(len(batch)))
 
     # ---------------------------------------------------------------- write
     async def commit(

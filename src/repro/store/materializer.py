@@ -384,6 +384,9 @@ class Materializer:
         self.cache = MaterializationCache(budget_bytes)
         self.fuse_chains = bool(fuse_chains)
         self.invalidation = invalidation
+        # decode counters; guarded by _stats_lock — reader-pool threads
+        # share one Materializer and the serving benchmark reads these
+        self._stats_lock = threading.Lock()
         self.full_decodes = 0
         self.delta_applies = 0
         self.fused_segments = 0
@@ -460,7 +463,11 @@ class Materializer:
         warmed = 0
         # reversed: LRU evicts oldest inserts first, so load coldest→hottest
         for vid in reversed(list(vids)):
-            if vid in self.cache:
+            # validated lookup, not bare containment: a stale-tagged entry
+            # (chain mode, e.g. an out-of-band metadata edit) must be
+            # dropped and re-warmed, not treated as present — and dropping
+            # it here also keeps the planner from calling it cached below
+            if self.cache.get(vid, self._entry_fp(vid), count=False) is not None:
                 continue
             plan = self.planner.plan([vid], cached=self.cache.vids())
             self._execute(plan)
@@ -468,13 +475,14 @@ class Materializer:
         return warmed
 
     def stats(self) -> Dict[str, int]:
-        return {
-            **self.cache.stats(),
-            "full_decodes": self.full_decodes,
-            "delta_applies": self.delta_applies,
-            "fused_segments": self.fused_segments,
-            "fused_launches": self.fused_stats.get("launches", 0),
-        }
+        with self._stats_lock:
+            return {
+                **self.cache.stats(),
+                "full_decodes": self.full_decodes,
+                "delta_applies": self.delta_applies,
+                "fused_segments": self.fused_segments,
+                "fused_launches": self.fused_stats.get("launches", 0),
+            }
 
     # -- plan execution ------------------------------------------------------
     def _execute(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
@@ -488,13 +496,13 @@ class Materializer:
             trees = self._execute_fused(plan)
         else:
             trees = self._execute_stepwise(plan)
-        # hit/miss accounting per requested vid
+        # hit/miss accounting per requested vid — under the cache lock, the
+        # counters are shared with every reader-pool thread
         planned = {s.vid for s in plan.steps}
-        for vid in plan.requested:
-            if vid in planned:
-                self.cache.misses += 1
-            else:
-                self.cache.hits += 1
+        n_miss = sum(1 for vid in plan.requested if vid in planned)
+        with self.cache._lock:
+            self.cache.misses += n_miss
+            self.cache.hits += len(plan.requested) - n_miss
         return trees
 
     def _load_cached(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
@@ -509,18 +517,22 @@ class Materializer:
         """Legacy one-hop-at-a-time execution (``fuse_chains=False``)."""
         objects = self._store.objects
         trees = self._load_cached(plan)
+        n_full = n_delta = 0
         for step in plan.steps:
             if step.base is None:
                 tree = decode_full(objects.get(step.object_key))
-                self.full_decodes += 1
+                n_full += 1
             else:
                 base_tree = trees.get(step.base)
                 if base_tree is None:  # base evicted between plan and execute
                     base_tree = self._materialize_chain(step.base, trees)
                 tree = apply_delta(base_tree, objects.get(step.object_key))
-                self.delta_applies += 1
+                n_delta += 1
             trees[step.vid] = _freeze(tree)
             self.cache.put(step.vid, tree, self._entry_fp(step.vid))
+        with self._stats_lock:
+            self.full_decodes += n_full
+            self.delta_applies += n_delta
         return trees
 
     def _execute_fused(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
@@ -538,6 +550,8 @@ class Materializer:
         objects = self._store.objects
         trees = self._load_cached(plan)
         blocked: Dict[int, BlockedTree] = {}
+        n_full = n_delta = n_segments = 0
+        wave_stats: Dict[str, int] = {}
 
         requested = set(plan.requested)
         dependents = collections.Counter(
@@ -553,7 +567,7 @@ class Materializer:
         for step in plan.steps:
             if step.base is None:
                 tree = decode_full(objects.get(step.object_key))
-                self.full_decodes += 1
+                n_full += 1
                 trees[step.vid] = _freeze(tree)
                 self.cache.put(step.vid, tree, self._entry_fp(step.vid))
                 continue
@@ -587,13 +601,21 @@ class Materializer:
                 )
                 for s in ready
             ]
-            results = apply_delta_chains(requests, stats=self.fused_stats)
+            # wave_stats is plan-local: apply_delta_chains mutates the dict
+            # it is given, and self.fused_stats is shared across threads
+            results = apply_delta_chains(requests, stats=wave_stats)
             for s, (tree, blk) in zip(ready, results):
                 trees[s.terminal] = _freeze(tree)
                 blocked[s.terminal] = blk
                 self.cache.put(s.terminal, tree, self._entry_fp(s.terminal))
-                self.delta_applies += len(s.steps)
-                self.fused_segments += 1
+                n_delta += len(s.steps)
+                n_segments += 1
+        with self._stats_lock:
+            self.full_decodes += n_full
+            self.delta_applies += n_delta
+            self.fused_segments += n_segments
+            for k, v in wave_stats.items():
+                self.fused_stats[k] = self.fused_stats.get(k, 0) + v
         return trees
 
     def _materialize_chain(
@@ -602,15 +624,19 @@ class Materializer:
         """Fallback chain walk for a base missing from cache and plan."""
         plan = self.planner.plan([vid], cached=trees.keys())
         objects = self._store.objects
+        n_full = n_delta = 0
         for step in plan.steps:
             if step.base is None:
                 tree = decode_full(objects.get(step.object_key))
-                self.full_decodes += 1
+                n_full += 1
             else:
                 tree = apply_delta(
                     trees[step.base], objects.get(step.object_key)
                 )
-                self.delta_applies += 1
+                n_delta += 1
             trees[step.vid] = _freeze(tree)
             self.cache.put(step.vid, tree, self._entry_fp(step.vid))
+        with self._stats_lock:
+            self.full_decodes += n_full
+            self.delta_applies += n_delta
         return trees[vid]

@@ -95,23 +95,30 @@ class Repository:
 
     def resolve(self, ref: Optional[Ref] = None) -> int:
         """Ref -> vid.  ``None`` resolves the current branch tip; branch
-        names shadow tag names; raw vids pass through (validated)."""
-        if ref is None:
-            ref = self.head
-        if isinstance(ref, (int, np.integer)):
-            vid = int(ref)
-            if vid not in self.store.versions:
-                raise ValueError(f"unknown version id {vid}")
-            return vid
-        branches, tags = self.store.refs["branches"], self.store.refs["tags"]
-        if ref in branches:
-            return branches[ref]
-        if ref in tags:
-            return tags[ref]
-        raise ValueError(
-            f"unknown ref {ref!r}: branches={sorted(branches)}, "
-            f"tags={sorted(tags)}"
-        )
+        names shadow tag names; raw vids pass through (validated).
+
+        Takes the store lock: the service tier resolves on its event loop
+        while the writer thread advances branch refs, and the snapshot
+        point must be the before- or after-commit tip, decided by the lock
+        rather than GIL dict atomicity."""
+        with self.store._lock:
+            if ref is None:
+                ref = self.head
+            if isinstance(ref, (int, np.integer)):
+                vid = int(ref)
+                if vid not in self.store.versions:
+                    raise ValueError(f"unknown version id {vid}")
+                return vid
+            branches = self.store.refs["branches"]
+            tags = self.store.refs["tags"]
+            if ref in branches:
+                return branches[ref]
+            if ref in tags:
+                return tags[ref]
+            raise ValueError(
+                f"unknown ref {ref!r}: branches={sorted(branches)}, "
+                f"tags={sorted(tags)}"
+            )
 
     def branch(self, name: str, at: Optional[Ref] = None) -> str:
         """Create branch ``name`` at ``at`` (default: current head tip)."""

@@ -288,18 +288,23 @@ class VersionStore:
         next lookup.  Recomputed per call — deliberately not memoized, so
         even out-of-band ``stored_base``/``object_key`` edits are caught —
         and the walk is bounded, so a corrupted cycle raises instead of
-        looping."""
-        h = hashlib.sha256()
-        v: Optional[int] = vid
-        hops = 0
-        while v is not None:
-            meta = self.versions[v]
-            h.update(f"{v}:{meta.stored_base}:{meta.object_key};".encode())
-            v = meta.stored_base
-            hops += 1
-            if hops > len(self.versions):
-                raise RuntimeError("storage graph cycle")
-        return h.hexdigest()
+        looping.  Holds the store lock: reader-pool threads fingerprint
+        chains while the writer thread mutates ``versions``, and the walk
+        must observe either the pre- or post-mutation graph, never a mix."""
+        with self._lock:
+            h = hashlib.sha256()
+            v: Optional[int] = vid
+            hops = 0
+            while v is not None:
+                meta = self.versions[v]
+                h.update(
+                    f"{v}:{meta.stored_base}:{meta.object_key};".encode()
+                )
+                v = meta.stored_base
+                hops += 1
+                if hops > len(self.versions):
+                    raise RuntimeError("storage graph cycle")
+            return h.hexdigest()
 
     def checkout(self, vid: int) -> FlatTree:
         """Recreate a version through the materialization layer."""

@@ -212,6 +212,22 @@ class TestOracleParity:
         assert s1["invalidations"] == s0["invalidations"] + 1
         assert m.probe(v)  # rebuilt and re-tagged
 
+    def test_prefetch_rewarms_stale_tagged_entry(self, tmp_path):
+        """Regression: prefetch skipped any vid already *present* in the
+        cache, so a stale-tagged entry (which get() would reject) blocked
+        re-warming that vid forever."""
+        store, trees, vids = build_branching(tmp_path)
+        v = vids[2]
+        store.checkout(v)  # warm
+        m = store.materializer
+        with m.cache._lock:
+            tree, nbytes, _ = m.cache._entries[v]
+            m.cache._entries[v] = (tree, nbytes, "stale-tag")
+        assert not m.probe(v)
+        assert m.prefetch([v]) == 1  # was 0: bare containment skipped it
+        assert m.probe(v)
+        assert np.array_equal(store.checkout(v)["w"], trees[v]["w"])
+
 
 class TestEvictionUnchanged:
     def test_lru_byte_budget_still_enforced(self, tmp_path):

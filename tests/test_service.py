@@ -236,6 +236,81 @@ class TestWriteCoordination:
         asyncio.run(after())
 
 
+class TestCancellation:
+    def test_cancelled_waiter_does_not_poison_coalesced_future(
+        self, tmp_path
+    ):
+        """Regression: waiters awaited the shared in-flight future
+        directly, so cancelling one coalesced request cancelled the future
+        under every other waiter (and left a cancelled future in _inflight
+        for later arrivals)."""
+        repo, trees = build_repo(tmp_path)
+        tip = repo.resolve("main")
+
+        async def go():
+            async with repo.serve(batch_window_s=0.05) as svc:
+                tasks = [
+                    asyncio.create_task(svc.checkout("main"))
+                    for _ in range(4)
+                ]
+                await asyncio.sleep(0.01)  # all coalesced onto one future
+                tasks[0].cancel()
+                done = await asyncio.gather(*tasks, return_exceptions=True)
+                # a new request for the same vid must still be servable
+                late = await svc.checkout("main")
+                return done, late, svc.stats()["counters"]
+
+        done, late, c = asyncio.run(go())
+        assert isinstance(done[0], asyncio.CancelledError)
+        for t in done[1:]:
+            assert not isinstance(t, BaseException)
+            assert np.array_equal(t["w"], trees[tip]["w"])
+        assert np.array_equal(late["w"], trees[tip]["w"])
+        assert c.get("errors.checkout", 0) == 0
+
+    def test_cancelled_requester_does_not_let_repack_race_batch(
+        self, tmp_path
+    ):
+        """Regression: a cancelled requester released its read claim while
+        its _PendingCheckout stayed queued, so a repack could rewrite the
+        storage graph concurrently with the window-timer dispatch.  The
+        batch now parks one claim per entry until it settles: by the time
+        the repack body runs, the orphaned batch must already be done."""
+        repo, trees = build_repo(tmp_path, versions=8)
+        vid = sorted(trees)[0]
+
+        async def go():
+            async with repo.serve(batch_window_s=0.05) as svc:
+                t = asyncio.create_task(svc.checkout(vid))
+                await asyncio.sleep(0.01)  # enqueued; claim parked on batch
+                pend = list(svc._pending)
+                assert pend and pend[0].vid == vid
+                t.cancel()
+                with pytest.raises(asyncio.CancelledError):
+                    await t
+
+                orig_repack = repo.repack
+                settled_at_repack = {}
+
+                def spying_repack(spec, **kw):
+                    # runs on the writer thread once the write lock is held
+                    settled_at_repack["done"] = pend[0].future.done()
+                    return orig_repack(spec, **kw)
+
+                repo.repack = spying_repack
+                try:
+                    await svc.repack(OptimizeSpec.problem(2))
+                finally:
+                    repo.repack = orig_repack
+                tree = await svc.checkout(vid)
+                return settled_at_repack, pend[0], tree
+
+        settled, pend0, tree = asyncio.run(go())
+        assert settled["done"] is True  # batch drained before the rewrite
+        assert not pend0.future.cancelled()
+        assert np.array_equal(tree["w"], trees[vid]["w"])
+
+
 class TestRWLock:
     def test_writer_excludes_readers_and_vice_versa(self):
         async def go():
