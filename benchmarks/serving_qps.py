@@ -26,9 +26,17 @@ append to ``BENCH_serving_qps.json``; the suite registers as
 ``serving_qps`` in ``benchmarks.run`` with a small n + short duration for
 CI smoke.
 
+Each measured run executes under an enabled :mod:`repro.obs` tracer: a
+per-stage breakdown (queue wait / decode / device delta-apply span totals)
+and a span↔metrics reconciliation ratio land in the per-mode results, and
+both runs export into one Perfetto-loadable Chrome trace
+(``BENCH_serving_qps_trace.json``, chain = pid 1, global = pid 2) so a
+regression in the summary numbers can be opened as a timeline.
+
 Run standalone:
     PYTHONPATH=src python -m benchmarks.serving_qps [--n 400]
         [--requests 800] [--qps 400] [--write-fraction 0.08] [--zipf 1.1]
+        [--trace-out PATH]
 """
 
 from __future__ import annotations
@@ -45,12 +53,16 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
+from repro.obs import Tracer, chrome_trace, set_tracer, validate_chrome_trace
 from repro.store.repository import Repository
 
 from .common import Row
 from .serving_checkout import _NO_FLUSH, build_store, zipf_requests
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_serving_qps.json"
+TRACE_PATH = (
+    Path(__file__).resolve().parent.parent / "BENCH_serving_qps_trace.json"
+)
 DEFAULT_N = 400
 DEFAULT_REQUESTS = 800
 DEFAULT_QPS = 400.0
@@ -102,6 +114,7 @@ async def run_traffic(
     readers: int = 4,
     batch_window_s: float = 0.002,
     max_batch: int = 32,
+    tracer: Optional[Tracer] = None,
 ) -> Dict:
     """Fire the recorded workload open-loop; return QPS + latency rollups."""
     async with repo.serve(
@@ -140,6 +153,40 @@ async def run_traffic(
 
         return round(percentile(xs, q) * 1e3, 4) if xs else 0.0
 
+    stages: Dict[str, float] = {}
+    recon: Dict[str, Optional[float]] = {}
+    if tracer is not None:
+        spansum = tracer.summary()
+
+        def span_total(name: str) -> float:
+            return spansum.get(name, {}).get("total_s", 0.0)
+
+        def track_total(name: str) -> float:
+            tr = snap["tracks"].get(name, {})
+            return tr.get("mean_ms", 0.0) * tr.get("count", 0) / 1e3
+
+        def ratio(a: float, b: float) -> Optional[float]:
+            return round(a / b, 4) if b > 0 else None
+
+        stages = {
+            "queue_wait_ms": round(span_total("svc.queue_wait") * 1e3, 4),
+            "decode_ms": round(span_total("svc.decode") * 1e3, 4),
+            "delta_apply_ms": round(
+                span_total("delta.apply_chains") * 1e3, 4
+            ),
+            "spans": len(tracer),
+            "spans_dropped": tracer.dropped,
+        }
+        # spans and metrics are written from the same monotonic timestamps,
+        # so these must sit at 1.0 within float noise — the benchmark's
+        # acceptance gate pins them to ±5%
+        recon = {
+            "queue_wait": ratio(
+                span_total("svc.queue_wait"), track_total("queue_wait")
+            ),
+            "decode": ratio(span_total("svc.decode"), track_total("decode")),
+        }
+
     return {
         "requests": len(events),
         "reads": len(latencies),
@@ -156,6 +203,8 @@ async def run_traffic(
         "batched_refs": c.get("checkout.batched_refs", 0),
         "invalidations": snap["store"]["invalidations"],
         "purges": snap["store"]["purges"],
+        "stages": stages,
+        "span_reconciliation": recon,
     }
 
 
@@ -168,8 +217,13 @@ def run_benchmark(
     zipf_s: float = DEFAULT_ZIPF_S,
     readers: int = 4,
     seed: int = 0,
+    trace_out: Optional[Path] = TRACE_PATH,
 ) -> Dict:
-    """Build one store, replay one workload under both invalidation modes."""
+    """Build one store, replay one workload under both invalidation modes.
+
+    Each mode's measured pass runs under its own enabled tracer; both export
+    into one Chrome trace at ``trace_out`` (chain = pid 1, global = pid 2;
+    ``None`` skips the artifact)."""
     with tempfile.TemporaryDirectory(prefix="repro_qps_") as d:
         base = Path(d) / "base"
         store = build_store(str(base), n, seed=seed)
@@ -185,6 +239,7 @@ def run_benchmark(
         )
 
         modes: Dict[str, Dict] = {}
+        tracers: Dict[str, Tracer] = {}
         for mode in ("chain", "global"):
             root = Path(d) / mode
             shutil.copytree(base, root)
@@ -199,11 +254,33 @@ def run_benchmark(
                 repo.branch("main", at=vids[-1])
             # one warmup pass over the read set so both modes start hot;
             # the measured pass then shows what write traffic costs each
+            # (before the tracer installs — warmup decodes aren't the run)
             repo.store.checkout_many(
                 sorted({e.vid for e in events if e.op == "checkout"})
             )
-            modes[mode] = asyncio.run(run_traffic(repo, events, readers=readers))
+            tracer = Tracer(enabled=True, capacity=1 << 18)
+            old = set_tracer(tracer)
+            try:
+                modes[mode] = asyncio.run(
+                    run_traffic(
+                        repo, events, readers=readers, tracer=tracer
+                    )
+                )
+            finally:
+                set_tracer(old)
+            tracers[mode] = tracer
             repo.close()
+
+    artifact = None
+    if trace_out is not None:
+        merged = chrome_trace(
+            tracers["chain"], pid=1, process_name="serving_qps:chain"
+        )
+        chrome_trace(
+            tracers["global"], trace_out, pid=2,
+            process_name="serving_qps:global", base=merged,
+        )
+        artifact = str(trace_out)
 
     return {
         "n": n,
@@ -216,6 +293,7 @@ def run_benchmark(
         "hit_rate_delta": round(
             modes["chain"]["hit_rate"] - modes["global"]["hit_rate"], 4
         ),
+        "trace_artifact": artifact,
     }
 
 
@@ -258,6 +336,9 @@ def main() -> None:
     ap.add_argument("--zipf", type=float, default=DEFAULT_ZIPF_S)
     ap.add_argument("--readers", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", type=Path, default=TRACE_PATH,
+                    help="merged Chrome trace artifact path "
+                         f"(default {TRACE_PATH.name})")
     args = ap.parse_args()
     result = run_benchmark(
         args.n,
@@ -267,6 +348,7 @@ def main() -> None:
         zipf_s=args.zipf,
         readers=args.readers,
         seed=args.seed,
+        trace_out=args.trace_out,
     )
     record(result)
     print(json.dumps(result, indent=2))
@@ -277,7 +359,21 @@ def main() -> None:
         f"{result['global']['hit_rate']} "
         f"({'OK: append-aware strictly higher' if ok else 'REGRESSION'})"
     )
-    if not (ok and ok_qps):
+    ok_trace = True
+    if result["trace_artifact"]:
+        problems = validate_chrome_trace(result["trace_artifact"])
+        ok_trace = not problems
+        print(f"# trace artifact {result['trace_artifact']}: "
+              f"{'Perfetto-loadable' if ok_trace else problems}")
+    # span totals and ServiceMetrics tracks share one clock: ±5% or a stage
+    # is being measured twice / not at all
+    ok_recon = True
+    for mode in ("chain", "global"):
+        for stage, r in result[mode]["span_reconciliation"].items():
+            if r is not None and not (0.95 <= r <= 1.05):
+                ok_recon = False
+                print(f"# RECONCILIATION FAILURE {mode}/{stage}: {r}")
+    if not (ok and ok_qps and ok_trace and ok_recon):
         raise SystemExit(1)
 
 

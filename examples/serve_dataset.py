@@ -9,14 +9,24 @@ warm across every write, and the materializer's ``invalidations`` counter
 stays at zero.  A ``repack``, which rewrites chains wholesale, still
 purges everything — the demo ends with one to show both sides.
 
-Run:  PYTHONPATH=src python examples/serve_dataset.py
+The whole run executes under ``repro.obs.tracing()``: every request is
+traced end to end (enqueue → queue wait → batch fold → decode → device
+launches), the service's ``TradeoffMonitor`` samples the
+storage/recreation tradeoff on every commit and repack, and the demo
+finishes by printing the tradeoff snapshot plus a per-span summary and
+writing a Perfetto-loadable Chrome trace of everything it just did.
+
+Run:  PYTHONPATH=src python examples/serve_dataset.py [--trace-out PATH]
 """
 
+import argparse
 import asyncio
+import os
 import tempfile
 
 import numpy as np
 
+from repro import obs
 from repro.core import OptimizeSpec
 from repro.store.repository import Repository
 
@@ -75,12 +85,44 @@ async def run(repo: Repository) -> None:
             f"p50 {lat['p50_ms']} ms, p99 {lat['p99_ms']} ms"
         )
 
+        # the TradeoffMonitor sampled the storage/recreation tradeoff on
+        # every commit and again after the repack (Problems 5/6 objective)
+        trade = svc.stats()["tradeoff"]
+        latest = trade["latest"]
+        print(
+            f"[tradeoff] {latest['versions']} versions after "
+            f"{trade['samples']} samples: "
+            f"{latest['full_objects']} full + {latest['delta_objects']} delta "
+            f"objects, access-weighted recreation "
+            f"{latest['access_weighted_recreation_s'] * 1e3:.2f} ms"
+        )
+        print(f"[tradeoff] {repo.store.tradeoff_monitor.describe_drift()}")
+
 
 def main() -> None:
-    with tempfile.TemporaryDirectory() as root:
-        repo = Repository(root)
-        asyncio.run(run(repo))
-        repo.close()
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument(
+        "--trace-out",
+        default=os.path.join(tempfile.gettempdir(), "serve_dataset_trace.json"),
+        help="where to write the Perfetto-loadable Chrome trace",
+    )
+    args = parser.parse_args()
+
+    with obs.tracing() as tracer:
+        with tempfile.TemporaryDirectory() as root:
+            repo = Repository(root)
+            asyncio.run(run(repo))
+            repo.close()
+
+    summary = tracer.summary()
+    print(f"[trace] {len(tracer)} spans across {len(summary)} names; top 5:")
+    top = sorted(summary.items(), key=lambda kv: -kv[1]["total_s"])[:5]
+    for name, s in top:
+        print(f"  {name:<22} x{s['count']:<4} {s['total_s'] * 1e3:8.2f} ms")
+    obs.chrome_trace(tracer, args.trace_out, process_name="serve_dataset")
+    problems = obs.validate_chrome_trace(args.trace_out)
+    assert not problems, problems
+    print(f"[trace] wrote Perfetto trace to {args.trace_out}")
     print("OK ✓")
 
 

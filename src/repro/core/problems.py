@@ -52,6 +52,7 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, Dict, FrozenSet, Optional, Tuple
 
+from ..obs.tracer import start as _trace_start
 from .solvers import CONSTRAINT_TOL, BackendUnsupported
 from .solvers.gith import git_heuristic
 from .solvers.last import last_tree
@@ -286,6 +287,7 @@ def optimize(g: VersionGraph, spec: OptimizeSpec) -> OptimizeResult:
             f"legacy string solvers go through run_solver()/spec_from_solver()"
         )
     t0 = time.monotonic()
+    _sp = _trace_start("core.optimize", n=g.n)
     weights = spec.weights()
     opts = spec.options_dict()
     diagnostics: Dict[str, Any] = {}
@@ -387,6 +389,17 @@ def optimize(g: VersionGraph, spec: OptimizeSpec) -> OptimizeResult:
     else:
         objective_value = values[obj_metric]
 
+    if _sp:
+        _sp.set(
+            problem=problem,
+            solver=solver_name,
+            backend=spec.backend,
+            backend_used=backend_used,
+            fallback="backend_fallback" in diagnostics,
+            objective=obj_metric,
+            objective_value=float(objective_value),
+        )
+    _sp.end()
     return OptimizeResult(
         solution=sol,
         spec=spec,

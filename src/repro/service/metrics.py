@@ -18,6 +18,7 @@ record into the same registry.
 from __future__ import annotations
 
 import collections
+import math
 import threading
 from typing import Deque, Dict, Iterable, List, Union
 
@@ -25,11 +26,18 @@ __all__ = ["LatencyTrack", "ServiceMetrics", "percentile"]
 
 
 def percentile(samples: Iterable[float], q: float) -> float:
-    """Nearest-rank percentile of a non-empty sample set (``q`` in 0..100)."""
+    """Nearest-rank percentile of a non-empty sample set (``q`` in 0..100).
+
+    Half-point ranks round *up* (explicit floor-half-up): builtin
+    ``round()`` is banker's rounding, which sends every ``x.5`` rank to the
+    nearer even index — on even-length windows the median rank (exactly
+    ``.5``) then always resolves to the lower neighbor and the reported
+    quantile biases low.
+    """
     xs = sorted(samples)
     if not xs:
         raise ValueError("percentile of empty sample set")
-    idx = int(round(q / 100.0 * (len(xs) - 1)))
+    idx = int(math.floor(q / 100.0 * (len(xs) - 1) + 0.5))
     return xs[min(len(xs) - 1, max(0, idx))]
 
 
@@ -73,6 +81,7 @@ class ServiceMetrics:
         self._track_cap = int(track_cap)
         self._counters: Dict[str, int] = {}
         self._tracks: Dict[str, LatencyTrack] = {}
+        self._gauges: Dict[str, float] = {}
 
     def inc(self, name: str, n: int = 1) -> None:
         with self._lock:
@@ -81,6 +90,16 @@ class ServiceMetrics:
     def counter(self, name: str) -> int:
         with self._lock:
             return self._counters.get(name, 0)
+
+    def set_gauge(self, name: str, value: float) -> None:
+        """Last-write-wins point-in-time value (tradeoff drift ratios, store
+        gauges — anything that is a level, not a count or a latency)."""
+        with self._lock:
+            self._gauges[name] = value
+
+    def gauge(self, name: str, default: float = 0.0) -> float:
+        with self._lock:
+            return self._gauges.get(name, default)
 
     def observe(self, track: str, seconds: float) -> None:
         with self._lock:
@@ -95,7 +114,7 @@ class ServiceMetrics:
             return t.summary() if t is not None else {"count": 0}
 
     def snapshot(self) -> Dict[str, Union[Dict, int]]:
-        """Point-in-time view: every counter plus every track rollup."""
+        """Point-in-time view: every counter, track rollup, and gauge."""
         with self._lock:
             return {
                 "counters": dict(sorted(self._counters.items())),
@@ -103,4 +122,5 @@ class ServiceMetrics:
                     name: t.summary()
                     for name, t in sorted(self._tracks.items())
                 },
+                "gauges": dict(sorted(self._gauges.items())),
             }

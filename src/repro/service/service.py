@@ -62,6 +62,8 @@ import logging
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Set, Union
 
+from ..obs.tracer import get_tracer
+from ..obs.tradeoff import TradeoffMonitor
 from ..store.delta import FlatTree
 from ..store.repository import Ref, Repository, TreeDiff
 from .metrics import ServiceMetrics
@@ -141,11 +143,14 @@ class _AsyncRWLock:
 
 @dataclasses.dataclass
 class _PendingCheckout:
-    """One enqueued checkout awaiting its batch: vid, future, enqueue time."""
+    """One enqueued checkout awaiting its batch: vid, future, enqueue time,
+    and (when tracing) the request's root span — the batch dispatcher
+    parents the retroactive queue-wait span under it."""
 
     vid: int
     future: "asyncio.Future[FlatTree]"
     enqueued_at: float
+    span: Any = None
 
 
 class DatasetService:
@@ -162,6 +167,18 @@ class DatasetService:
     * ``fsck_interval_s`` — run a background integrity sweep this often
       (``None`` disables; see :class:`FsckSweeper`).  ``fsck_sample``
       bounds the expensive per-version re-decode.
+    * ``tradeoff`` — attach a :class:`~repro.obs.tradeoff.TradeoffMonitor`
+      to the store for the service's lifetime (default on): live (C, R)
+      samples on every commit/repack, surfaced through :meth:`stats`,
+      the sweeper's drift gauges, and the Prometheus exporter.
+
+    Tracing: the request path records spans into the process-global
+    :mod:`repro.obs` tracer (disabled by default — the instrumentation then
+    costs one attribute check per request stage).  Enable with
+    ``repro.obs.tracing()`` around the service, or install a tracer via
+    ``repro.obs.set_tracer``.  Span times share the event loop's
+    ``time.monotonic`` clock, so per-stage span totals reconcile exactly
+    with the ``ServiceMetrics`` latency tracks.
     """
 
     def __init__(
@@ -174,6 +191,7 @@ class DatasetService:
         fsck_interval_s: Optional[float] = None,
         fsck_sample: Optional[int] = None,
         metrics_cap: int = 100_000,
+        tradeoff: bool = True,
     ) -> None:
         if readers < 1:
             raise ValueError(f"need at least one reader thread, got {readers}")
@@ -184,6 +202,9 @@ class DatasetService:
         self.fsck_interval_s = fsck_interval_s
         self.fsck_sample = fsck_sample
         self.metrics = ServiceMetrics(track_cap=metrics_cap)
+        self.tradeoff = bool(tradeoff)
+        self._owns_monitor = False
+        self._monitor: Optional[TradeoffMonitor] = None
         self.last_fsck = None  # most recent sweep Report (sweeper writes it)
         self._rw = _AsyncRWLock()
         self._loop: Optional[asyncio.AbstractEventLoop] = None
@@ -208,6 +229,11 @@ class DatasetService:
         self._writer_pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="repro-svc-write"
         )
+        if self.tradeoff and self.repo.store.tradeoff_monitor is None:
+            self.repo.store.tradeoff_monitor = TradeoffMonitor(self.repo.store)
+            self._owns_monitor = True
+            self.repo.store.tradeoff_monitor.sample("start")
+        self._monitor = self.repo.store.tradeoff_monitor
         self._started = True
         if self.fsck_interval_s is not None:
             from .sweeper import FsckSweeper  # local: sweeper imports us
@@ -238,6 +264,11 @@ class DatasetService:
             pass
         self._reader_pool.shutdown(wait=True)
         self._writer_pool.shutdown(wait=True)
+        if self._owns_monitor:
+            # detach so store-layer bulk commits stop paying O(n) sampling;
+            # self._monitor keeps the history readable through stats()
+            self.repo.store.tradeoff_monitor = None
+            self._owns_monitor = False
         self.repo.store.flush_access_counts()
 
     async def __aenter__(self) -> "DatasetService":
@@ -264,12 +295,16 @@ class DatasetService:
         self._require_started()
         t0 = self._loop.time()
         self.metrics.inc("requests.checkout")
+        tr = get_tracer()
+        sp = tr.start("svc.checkout")  # request root span (NULL when disabled)
         try:
             async with self._rw.read():
                 vid = self.repo.resolve(ref)  # snapshot point
                 fut = self._inflight.get(vid)
                 if fut is not None:
                     self.metrics.inc("checkout.coalesced")
+                    if sp:
+                        sp.set(vid=vid, coalesced=True)
                 else:
                     fut = self._loop.create_future()
                     self._inflight[vid] = fut
@@ -278,7 +313,11 @@ class DatasetService:
                     # cannot slip between enqueue and dispatch even if
                     # every requester behind the batch is cancelled
                     self._rw.claim_read_nowait()
-                    self._pending.append(_PendingCheckout(vid, fut, t0))
+                    if sp:
+                        sp.set(vid=vid, coalesced=False)
+                    self._pending.append(
+                        _PendingCheckout(vid, fut, t0, sp or None)
+                    )
                     self._arm_window()
                 # shield: the future is shared by every request coalesced
                 # onto this vid — one waiter's cancellation must neither
@@ -287,7 +326,11 @@ class DatasetService:
                 tree = await asyncio.shield(fut)
         except Exception:
             self.metrics.inc("errors.checkout")
+            if sp:
+                sp.set(error=True)
             raise
+        finally:
+            sp.end()
         self.metrics.observe("latency.checkout", self._loop.time() - t0)
         return dict(tree)
 
@@ -326,18 +369,30 @@ class DatasetService:
         pending or running batch, whatever happened to the requesters."""
         now = self._loop.time()
         store = self.repo.store
+        tr = get_tracer()
+        bsp = tr.start("svc.batch", size=len(batch))
         self.metrics.inc("checkout.batches")
         self.metrics.inc("checkout.batched_refs", len(batch))
         for p in batch:
             self.metrics.observe("queue_wait", now - p.enqueued_at)
+            if tr.enabled:
+                # retroactive: the enqueue→dispatch interval, parented under
+                # the request's own root span (exactly the queue_wait track)
+                tr.add_event(
+                    "svc.queue_wait", p.enqueued_at, now,
+                    parent=p.span, vid=p.vid,
+                )
         vids = [p.vid for p in batch]  # distinct by construction (coalescing)
 
         def run_batch():
             # warm-hit attribution just before the decode mutates cache
             # state — on the reader thread, because probe() hashes the whole
             # decode chain per vid (too much work for the event loop)
-            warm = sum(1 for v in vids if store.materializer.probe(v))
-            return warm, store.checkout_many(vids)
+            # (attach: pool threads don't inherit the submitting context, so
+            # materializer/delta spans need the batch span bridged across)
+            with tr.attach(bsp or None):
+                warm = sum(1 for v in vids if store.materializer.probe(v))
+                return warm, store.checkout_many(vids)
 
         try:
             try:
@@ -345,9 +400,16 @@ class DatasetService:
                 warm, trees = await self._loop.run_in_executor(
                     self._reader_pool, run_batch
                 )
-                self.metrics.observe("decode", self._loop.time() - t0)
+                t1 = self._loop.time()
+                self.metrics.observe("decode", t1 - t0)
+                if tr.enabled:
+                    # same interval the "decode" track just recorded
+                    tr.add_event("svc.decode", t0, t1, parent=bsp,
+                                 vids=len(vids), warm=warm)
                 self.metrics.inc("checkout.warm_hits", warm)
                 self.metrics.inc("checkout.warm_misses", len(vids) - warm)
+                if bsp:
+                    bsp.set(warm=warm)
             except Exception as exc:
                 for p in batch:
                     self._inflight.pop(p.vid, None)
@@ -362,6 +424,7 @@ class DatasetService:
                 if not p.future.done():
                     p.future.set_result(tree)
         finally:
+            bsp.end()
             # shielded: the claims MUST drop even if this task is cancelled
             # mid-release, or a waiting writer hangs forever
             await asyncio.shield(self._rw.release_read(len(batch)))
@@ -385,17 +448,29 @@ class DatasetService:
         self._require_started()
         t0 = self._loop.time()
         self.metrics.inc("requests.commit")
+        tr = get_tracer()
+        sp = tr.start("svc.commit")
+
+        def run_commit():
+            with tr.attach(sp or None):  # bridge onto the writer thread
+                return self.repo.commit(
+                    tree, message=message, parent=parent, branch=branch
+                )
+
         try:
             async with self._rw.read():
                 vid = await self._loop.run_in_executor(
-                    self._writer_pool,
-                    lambda: self.repo.commit(
-                        tree, message=message, parent=parent, branch=branch
-                    ),
+                    self._writer_pool, run_commit
                 )
         except Exception:
             self.metrics.inc("errors.commit")
+            if sp:
+                sp.set(error=True)
             raise
+        finally:
+            sp.end()
+        if sp:
+            sp.set(vid=vid)
         self.metrics.observe("latency.commit", self._loop.time() - t0)
         return vid
 
@@ -408,10 +483,26 @@ class DatasetService:
         self._require_started()
         t0 = self._loop.time()
         self.metrics.inc("requests.repack")
-        async with self._rw.write():
-            out = await self._loop.run_in_executor(
-                self._writer_pool, lambda: self.repo.repack(spec, **kwargs)
-            )
+        tr = get_tracer()
+        sp = tr.start("svc.repack")
+
+        def run_repack():
+            with tr.attach(sp or None):  # store.repack nests under us
+                return self.repo.repack(spec, **kwargs)
+
+        try:
+            async with self._rw.write():
+                if tr.enabled:
+                    # the drain window: write-lock wait while in-flight
+                    # readers finish
+                    tr.add_event(
+                        "svc.quiesce", t0, self._loop.time(), parent=sp
+                    )
+                out = await self._loop.run_in_executor(
+                    self._writer_pool, run_repack
+                )
+        finally:
+            sp.end()
         self.metrics.observe("latency.repack", self._loop.time() - t0)
         return out
 
@@ -420,19 +511,21 @@ class DatasetService:
         """Ancestry of ``ref`` (resolved at dispatch), newest first."""
         self._require_started()
         self.metrics.inc("requests.log")
-        async with self._rw.read():
-            return await self._loop.run_in_executor(
-                self._reader_pool, self.repo.log, ref
-            )
+        with get_tracer().span("svc.log"):
+            async with self._rw.read():
+                return await self._loop.run_in_executor(
+                    self._reader_pool, self.repo.log, ref
+                )
 
     async def diff(self, a: Ref, b: Ref) -> TreeDiff:
         """Leaf-level diff of two refs, materialized on a reader thread."""
         self._require_started()
         self.metrics.inc("requests.diff")
-        async with self._rw.read():
-            return await self._loop.run_in_executor(
-                self._reader_pool, self.repo.diff, a, b
-            )
+        with get_tracer().span("svc.diff"):
+            async with self._rw.read():
+                return await self._loop.run_in_executor(
+                    self._reader_pool, self.repo.diff, a, b
+                )
 
     async def fsck(self):
         """One on-demand integrity sweep (same path, metrics and write-lock
@@ -446,9 +539,13 @@ class DatasetService:
 
     # -------------------------------------------------------------- stats
     def stats(self) -> Dict[str, Any]:
-        """Service metrics snapshot + the shared materializer/cache stats."""
+        """Service metrics snapshot + the shared materializer/cache stats,
+        plus the live tradeoff telemetry when a monitor is attached."""
         out = self.metrics.snapshot()
         out["store"] = self.repo.store.materializer.stats()
+        mon = self._monitor or self.repo.store.tradeoff_monitor
+        if mon is not None:
+            out["tradeoff"] = mon.snapshot()
         if self.last_fsck is not None:
             out["fsck"] = {
                 "findings": len(self.last_fsck.findings),

@@ -16,6 +16,13 @@ chains violate the recreation-cost bound the last repack was solved
 against — the sweep counts it under ``fsck.repack_recommended`` and logs a
 repack recommendation, since re-solving storage is the fix, not a serving
 concern.
+
+When the service carries a :class:`~repro.obs.tradeoff.TradeoffMonitor`
+(the default), every sweep also publishes the live (C, R) drift as gauges
+(``tradeoff.storage_ratio``, ``tradeoff.access_weighted_recreation_ratio``,
+…) and the repack recommendation becomes *quantitative*: the warning says
+how far the tradeoff has moved — "access-weighted R is 2.3x the post-repack
+baseline" — not just that a constraint broke.
 """
 
 from __future__ import annotations
@@ -60,22 +67,69 @@ class FsckSweeper:
 
     async def sweep(self):
         """One sweep: quiesce requests, fsck on a reader thread, record."""
+        from ..obs.tracer import get_tracer
+
         svc = self.service
-        async with svc._rw.write():
-            report = await svc._loop.run_in_executor(
-                svc._reader_pool,
-                lambda: svc.repo.fsck(sample=self.sample),
-            )
+        tr = get_tracer()
+        sp = tr.start("svc.fsck_sweep")
+        t0 = svc._loop.time()
+        try:
+            async with svc._rw.write():
+                if tr.enabled:
+                    tr.add_event(
+                        "svc.quiesce", t0, svc._loop.time(), parent=sp
+                    )
+
+                def run_fsck():
+                    with tr.attach(sp or None):
+                        return svc.repo.fsck(sample=self.sample)
+
+                report = await svc._loop.run_in_executor(
+                    svc._reader_pool, run_fsck
+                )
+        finally:
+            sp.end()
         svc.last_fsck = report
         svc.metrics.inc("fsck.sweeps")
         svc.metrics.inc("fsck.findings", len(report.findings))
+        if sp:
+            sp.set(findings=len(report.findings))
+        drift_note = self._publish_tradeoff_drift()
         drift = report.by_rule("fsck.constraint")
         if drift:
             svc.metrics.inc("fsck.repack_recommended")
             logger.warning(
                 "fsck: %d constraint-drift finding(s) — stored chains no "
                 "longer meet the last optimization's recreation bound; "
-                "recommend scheduling a repack",
+                "recommend scheduling a repack%s",
                 len(drift),
+                f" ({drift_note})" if drift_note else "",
             )
         return report
+
+    def _publish_tradeoff_drift(self) -> Optional[str]:
+        """Export the monitor's live drift ratios as ``tradeoff.*`` gauges
+        and return the human one-liner for the repack recommendation (or
+        ``None`` when no monitor/samples exist)."""
+        svc = self.service
+        mon = getattr(svc, "_monitor", None) or getattr(
+            svc.repo.store, "tradeoff_monitor", None
+        )
+        if mon is None:
+            return None
+        # take a fresh sample so the ratios reflect *now*, not the last
+        # commit (a sweep may run long after traffic went quiet)
+        mon.sample("sweep")
+        d = mon.drift()
+        if d is None:
+            return None
+        for key in (
+            "storage_ratio",
+            "access_weighted_recreation_ratio",
+            "recreation_p99_ratio",
+        ):
+            if d.get(key) is not None:
+                svc.metrics.set_gauge(f"tradeoff.{key}", round(d[key], 6))
+        svc.metrics.set_gauge("tradeoff.versions_added", d["versions_added"])
+        svc.metrics.set_gauge("tradeoff.storage_bytes", d["storage_bytes"])
+        return mon.describe_drift()

@@ -48,6 +48,7 @@ import numpy as np
 
 from ..kernels import ops
 from ..kernels.ref import BLOCK_BYTES
+from ..obs.tracer import start as _trace_start
 
 FlatTree = Dict[str, np.ndarray]
 # device-resident companion of a FlatTree: blocked form + layout meta per
@@ -282,6 +283,13 @@ def apply_delta_chains(
     :func:`apply_delta` over each chain.  ``stats`` (optional) is bumped
     with ``launches`` / ``fused_slots`` for observability.
     """
+    # explicit-lifetime span (no context entry): nothing below opens child
+    # spans, and the single end() keeps the device-dispatch loop unindented
+    _sp = _trace_start("delta.apply_chains", requests=len(requests))
+    # the caller's stats dict accumulates across calls; snapshot so the span
+    # attributes only this call's launches
+    _launch0 = (stats or {}).get("launches", 0)
+    _slots0 = (stats or {}).get("fused_slots", 0)
     wire_chains: List[List[DeltaWire]] = []
     outs: List[FlatTree] = []
     blocked_outs: List[BlockedTree] = []
@@ -364,6 +372,16 @@ def apply_delta_chains(
         fetched = jax.device_get([dev for _, _, dev in host_fetch])
         for (req, key, _), arr in zip(host_fetch, fetched):
             outs[req][key] = arr
+    if _sp:
+        if stats is not None:
+            _sp.set(
+                launches=stats.get("launches", 0) - _launch0,
+                fused_slots=stats.get("fused_slots", 0) - _slots0,
+            )
+        else:
+            _sp.set(launches=len(groups))
+        _sp.set(leaves=len(units))
+    _sp.end()
     return list(zip(outs, blocked_outs))
 
 

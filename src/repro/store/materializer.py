@@ -58,6 +58,7 @@ from typing import (
     Tuple,
 )
 
+from ..obs.tracer import span as _span
 from .delta import (
     BlockedTree,
     FlatTree,
@@ -435,20 +436,37 @@ class Materializer:
         to add/remove keys) but the arrays are shared with the cache and
         read-only.
         """
-        plan = self.planner.plan(vids, cached=self._cached_vids())
-        trees = self._execute(plan)
-        out: List[FlatTree] = []
-        for vid in plan.requested:
-            tree = trees.get(vid)
-            if tree is None:
-                tree = self.cache.get(vid, self._entry_fp(vid), count=False)
-            if tree is None:
-                # the planner saw this vid cached but its entry was evicted
-                # (concurrent checkout sharing the cache) or its chain tag
-                # went stale between plan and execute: rebuild it
-                tree = self._materialize_chain(vid, trees)
-            out.append(dict(tree))
-        return out
+        with _span("mat.checkout_many", vids=len(vids)) as msp:
+            with _span("mat.plan") as psp:
+                plan = self.planner.plan(vids, cached=self._cached_vids())
+                if psp:
+                    psp.set(
+                        steps=plan.decode_count,
+                        from_cache=len(plan.from_cache),
+                    )
+            trees = self._execute(plan)
+            out: List[FlatTree] = []
+            for vid in plan.requested:
+                tree = trees.get(vid)
+                if tree is None:
+                    tree = self.cache.get(
+                        vid, self._entry_fp(vid), count=False
+                    )
+                if tree is None:
+                    # the planner saw this vid cached but its entry was
+                    # evicted (concurrent checkout sharing the cache) or its
+                    # chain tag went stale between plan and execute: rebuild
+                    tree = self._materialize_chain(vid, trees)
+                out.append(dict(tree))
+            if msp:
+                planned = {s.vid for s in plan.steps}
+                msp.set(
+                    decode_steps=plan.decode_count,
+                    cache_hits=sum(
+                        1 for v in plan.requested if v not in planned
+                    ),
+                )
+            return out
 
     def prefetch(self, vids: Sequence[int]) -> int:
         """Warm the cache with ``vids`` (hottest first); returns trees cached.
@@ -516,20 +534,23 @@ class Materializer:
     def _execute_stepwise(self, plan: CheckoutPlan) -> Dict[int, FlatTree]:
         """Legacy one-hop-at-a-time execution (``fuse_chains=False``)."""
         objects = self._store.objects
-        trees = self._load_cached(plan)
-        n_full = n_delta = 0
-        for step in plan.steps:
-            if step.base is None:
-                tree = decode_full(objects.get(step.object_key))
-                n_full += 1
-            else:
-                base_tree = trees.get(step.base)
-                if base_tree is None:  # base evicted between plan and execute
-                    base_tree = self._materialize_chain(step.base, trees)
-                tree = apply_delta(base_tree, objects.get(step.object_key))
-                n_delta += 1
-            trees[step.vid] = _freeze(tree)
-            self.cache.put(step.vid, tree, self._entry_fp(step.vid))
+        with _span("mat.execute_stepwise", steps=len(plan.steps)) as esp:
+            trees = self._load_cached(plan)
+            n_full = n_delta = 0
+            for step in plan.steps:
+                if step.base is None:
+                    tree = decode_full(objects.get(step.object_key))
+                    n_full += 1
+                else:
+                    base_tree = trees.get(step.base)
+                    if base_tree is None:  # base evicted plan→execute
+                        base_tree = self._materialize_chain(step.base, trees)
+                    tree = apply_delta(base_tree, objects.get(step.object_key))
+                    n_delta += 1
+                trees[step.vid] = _freeze(tree)
+                self.cache.put(step.vid, tree, self._entry_fp(step.vid))
+            if esp:
+                esp.set(full_decodes=n_full, delta_applies=n_delta)
         with self._stats_lock:
             self.full_decodes += n_full
             self.delta_applies += n_delta
@@ -548,68 +569,80 @@ class Materializer:
         ``to_blocks`` twice.
         """
         objects = self._store.objects
-        trees = self._load_cached(plan)
-        blocked: Dict[int, BlockedTree] = {}
-        n_full = n_delta = n_segments = 0
-        wave_stats: Dict[str, int] = {}
+        with _span("mat.execute_fused", steps=len(plan.steps)) as esp:
+            trees = self._load_cached(plan)
+            blocked: Dict[int, BlockedTree] = {}
+            n_full = n_delta = n_segments = 0
+            wave_stats: Dict[str, int] = {}
 
-        requested = set(plan.requested)
-        dependents = collections.Counter(
-            s.base for s in plan.steps if s.base is not None
-        )
-        caching = self.cache.budget_bytes > 0
+            requested = set(plan.requested)
+            dependents = collections.Counter(
+                s.base for s in plan.steps if s.base is not None
+            )
+            caching = self.cache.budget_bytes > 0
 
-        def endpoint(vid: int) -> bool:
-            return caching or vid in requested or dependents[vid] > 1
+            def endpoint(vid: int) -> bool:
+                return caching or vid in requested or dependents[vid] > 1
 
-        segments: List[_Segment] = []
-        open_at: Dict[int, _Segment] = {}
-        for step in plan.steps:
-            if step.base is None:
-                tree = decode_full(objects.get(step.object_key))
-                n_full += 1
-                trees[step.vid] = _freeze(tree)
-                self.cache.put(step.vid, tree, self._entry_fp(step.vid))
-                continue
-            seg = open_at.pop(step.base, None)
-            if seg is None:
-                seg = _Segment(base=step.base, steps=[])
-            seg.steps.append(step)
-            if endpoint(step.vid):
-                segments.append(seg)
-            else:
-                open_at[step.vid] = seg
-        # a chain tail is always requested (hence an endpoint), but close any
-        # stragglers defensively so no planned step is silently dropped
-        segments.extend(open_at.values())
+            segments: List[_Segment] = []
+            open_at: Dict[int, _Segment] = {}
+            for step in plan.steps:
+                if step.base is None:
+                    tree = decode_full(objects.get(step.object_key))
+                    n_full += 1
+                    trees[step.vid] = _freeze(tree)
+                    self.cache.put(step.vid, tree, self._entry_fp(step.vid))
+                    continue
+                seg = open_at.pop(step.base, None)
+                if seg is None:
+                    seg = _Segment(base=step.base, steps=[])
+                seg.steps.append(step)
+                if endpoint(step.vid):
+                    segments.append(seg)
+                else:
+                    open_at[step.vid] = seg
+            # a chain tail is always requested (hence an endpoint), but close
+            # any stragglers defensively so no planned step is dropped
+            segments.extend(open_at.values())
 
-        pending = segments
-        while pending:
-            ready = [s for s in pending if s.base in trees]
-            if not ready:
-                # base evicted between plan and execute: stepwise fallback
-                # rebuilds it (and anything under it), then the wave retries
-                self._materialize_chain(pending[0].base, trees)
-                continue
-            done = {id(s) for s in ready}
-            pending = [s for s in pending if id(s) not in done]
-            requests = [
-                (
-                    trees[s.base],
-                    [objects.get(st.object_key) for st in s.steps],
-                    blocked.get(s.base),
+            pending = segments
+            while pending:
+                ready = [s for s in pending if s.base in trees]
+                if not ready:
+                    # base evicted between plan and execute: stepwise
+                    # fallback rebuilds it (and anything under it), then the
+                    # wave retries
+                    self._materialize_chain(pending[0].base, trees)
+                    continue
+                done = {id(s) for s in ready}
+                pending = [s for s in pending if id(s) not in done]
+                requests = [
+                    (
+                        trees[s.base],
+                        [objects.get(st.object_key) for st in s.steps],
+                        blocked.get(s.base),
+                    )
+                    for s in ready
+                ]
+                # wave_stats is plan-local: apply_delta_chains mutates the
+                # dict it is given, and self.fused_stats is shared across
+                # threads
+                results = apply_delta_chains(requests, stats=wave_stats)
+                for s, (tree, blk) in zip(ready, results):
+                    trees[s.terminal] = _freeze(tree)
+                    blocked[s.terminal] = blk
+                    self.cache.put(
+                        s.terminal, tree, self._entry_fp(s.terminal)
+                    )
+                    n_delta += len(s.steps)
+                    n_segments += 1
+            if esp:
+                esp.set(
+                    full_decodes=n_full,
+                    delta_applies=n_delta,
+                    fused_segments=n_segments,
+                    fused_launches=wave_stats.get("launches", 0),
                 )
-                for s in ready
-            ]
-            # wave_stats is plan-local: apply_delta_chains mutates the dict
-            # it is given, and self.fused_stats is shared across threads
-            results = apply_delta_chains(requests, stats=wave_stats)
-            for s, (tree, blk) in zip(ready, results):
-                trees[s.terminal] = _freeze(tree)
-                blocked[s.terminal] = blk
-                self.cache.put(s.terminal, tree, self._entry_fp(s.terminal))
-                n_delta += len(s.steps)
-                n_segments += 1
         with self._stats_lock:
             self.full_decodes += n_full
             self.delta_applies += n_delta

@@ -90,6 +90,7 @@ from .delta import (
     encode_full,
     flatten_payload,
 )
+from ..obs.tracer import span as _span
 from .materializer import Materializer
 from .materializer import storage_fingerprint as _storage_graph_fp
 from .objectstore import ObjectStore
@@ -201,6 +202,10 @@ class VersionStore:
         # *current* storage graph (a post-repack mutation that silently
         # violates an agreed bound is a finding, not a crash)
         self.last_repack: Optional[Dict[str, Any]] = None
+        # optional live (C, R) sampler (repro.obs.tradeoff.TradeoffMonitor):
+        # when attached, commit/repack notify it.  Sampling is O(n) per
+        # event, so the service tier attaches it — not store-building loops.
+        self.tradeoff_monitor: Optional[Any] = None
         self._meta_path = self.root / "meta.msgpack"
         if self._meta_path.exists():
             self._load_meta()
@@ -219,51 +224,62 @@ class VersionStore:
         ``update_branch`` points the named branch ref at the new version in
         the same atomic metadata write as the commit itself (used by the
         Repository facade — one rewrite per commit, never two)."""
-        flat = flatten_payload(payload)
-        raw = sum(a.nbytes for a in flat.values())
-        with self._lock:
-            vid = self._next_vid
-            self._next_vid += 1
+        with _span("store.commit") as csp:
+            flat = flatten_payload(payload)
+            raw = sum(a.nbytes for a in flat.values())
+            with self._lock:
+                vid = self._next_vid
+                self._next_vid += 1
 
-        full_payload = encode_full(flat)
-        stored_base = None
-        best_obj = full_payload
-        best_stats = None
-        if parents:
-            base_flat = self._checkout_flat(parents[0])
-            delta_payload, stats = encode_delta(base_flat, flat)
-            if len(delta_payload) < len(full_payload):
-                stored_base = parents[0]
-                best_obj = delta_payload
-                best_stats = stats
-        key, stored = self.objects.put(best_obj)
-        if stored_base is None:
-            phi = self.cost_model.phi_full(stored, raw)
-        else:
-            phi = self.cost_model.phi_delta(
-                stored, len(best_obj), best_stats["changed_blocks"]
-            )
-        with self._lock:
-            self.versions[vid] = VersionMeta(
-                vid=vid,
-                parents=list(parents),
-                message=message,
-                created_at=time.time(),
-                raw_bytes=raw,
-                stored_base=stored_base,
-                object_key=key,
-                stored_bytes=stored,
-                phi=phi,
-                content_fp=hashlib.sha256(full_payload).hexdigest(),
-            )
-            # a commit only *appends* a (vid, stored_base, object_key) triple:
-            # the whole-graph fingerprint rotates (global-mode caches purge)
-            # but every existing decode chain is untouched, so append-aware
-            # caches stay warm
-            self._storage_fp = None
-            if update_branch is not None:
-                self.refs["branches"][update_branch] = vid
-            self._save_meta()
+            full_payload = encode_full(flat)
+            stored_base = None
+            best_obj = full_payload
+            best_stats = None
+            if parents:
+                base_flat = self._checkout_flat(parents[0])
+                delta_payload, stats = encode_delta(base_flat, flat)
+                if len(delta_payload) < len(full_payload):
+                    stored_base = parents[0]
+                    best_obj = delta_payload
+                    best_stats = stats
+            key, stored = self.objects.put(best_obj)
+            if stored_base is None:
+                phi = self.cost_model.phi_full(stored, raw)
+            else:
+                phi = self.cost_model.phi_delta(
+                    stored, len(best_obj), best_stats["changed_blocks"]
+                )
+            with self._lock:
+                self.versions[vid] = VersionMeta(
+                    vid=vid,
+                    parents=list(parents),
+                    message=message,
+                    created_at=time.time(),
+                    raw_bytes=raw,
+                    stored_base=stored_base,
+                    object_key=key,
+                    stored_bytes=stored,
+                    phi=phi,
+                    content_fp=hashlib.sha256(full_payload).hexdigest(),
+                )
+                # a commit only *appends* a (vid, stored_base, object_key)
+                # triple: the whole-graph fingerprint rotates (global-mode
+                # caches purge) but every existing decode chain is untouched,
+                # so append-aware caches stay warm
+                self._storage_fp = None
+                if update_branch is not None:
+                    self.refs["branches"][update_branch] = vid
+                self._save_meta()
+            if csp:
+                csp.set(
+                    vid=vid,
+                    raw_bytes=raw,
+                    stored_bytes=stored,
+                    encoding="full" if stored_base is None else "delta",
+                )
+        mon = self.tradeoff_monitor
+        if mon is not None:
+            mon.on_commit(vid)
         return vid
 
     # ------------------------------------------------------------ checkout
@@ -510,20 +526,46 @@ class VersionStore:
                     f"access counts."
                 )
             spec = spec.with_workload(self.access_weights())
-        before = {
-            "storage_bytes": self.storage_bytes(),
-            "sum_recreation_s": sum(self.recreation_cost(v) for v in self.versions),
-            "max_recreation_s": max(self.recreation_cost(v) for v in self.versions),
-        }
-        g, cache = self.build_cost_graph()
-        result = optimize(g, spec)
-        self._apply_solution(result.solution, cache)
-        after = {
-            "storage_bytes": self.storage_bytes(),
-            "sum_recreation_s": sum(self.recreation_cost(v) for v in self.versions),
-            "max_recreation_s": max(self.recreation_cost(v) for v in self.versions),
-        }
-        freed = self.gc()
+        with _span("store.repack", spec=spec.describe()) as rsp:
+            before = {
+                "storage_bytes": self.storage_bytes(),
+                "sum_recreation_s": sum(
+                    self.recreation_cost(v) for v in self.versions
+                ),
+                "max_recreation_s": max(
+                    self.recreation_cost(v) for v in self.versions
+                ),
+            }
+            with _span("store.measure") as msp:
+                g, cache = self.build_cost_graph()
+                if msp:
+                    msp.set(
+                        versions=len(self.versions),
+                        measured_edges=self.last_measured_edges,
+                    )
+            result = optimize(g, spec)
+            with _span("store.apply_solution"):
+                self._apply_solution(result.solution, cache)
+            after = {
+                "storage_bytes": self.storage_bytes(),
+                "sum_recreation_s": sum(
+                    self.recreation_cost(v) for v in self.versions
+                ),
+                "max_recreation_s": max(
+                    self.recreation_cost(v) for v in self.versions
+                ),
+            }
+            with _span("store.gc") as gsp:
+                freed = self.gc()
+                if gsp:
+                    gsp.set(freed_bytes=freed)
+            if rsp:
+                rsp.set(
+                    solver=result.solver,
+                    backend=result.backend_used,
+                    storage_bytes_before=before["storage_bytes"],
+                    storage_bytes_after=after["storage_bytes"],
+                )
         self.last_repack = {
             "describe": spec.describe(),
             "problem": result.problem,
@@ -548,6 +590,9 @@ class VersionStore:
                 reverse=True,
             )[: self.prefetch_hot_k]
             self.materializer.prefetch(hot)
+        mon = self.tradeoff_monitor
+        if mon is not None:
+            mon.on_repack()
         return {
             "before": before,
             "after": after,
